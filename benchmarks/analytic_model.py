@@ -1,0 +1,161 @@
+"""Analytic FLOPs / HBM-bytes model per (arch x shape) cell.
+
+Why analytic: XLA's cost_analysis counts while-loop bodies ONCE (verified in
+this container -- see EXPERIMENTS.md §Dry-run), so scanned-layer modules
+under-report by ~L x.  The roofline therefore uses an auditable per-matmul
+analytic model, cross-validated against HLO-exact flops on small UNROLLED
+configs (tests/test_roofline_model.py), with HLO used exactly where it is
+exact: per-device memory images and collective bytes (loop-multiplied).
+
+All counts are GLOBAL per step; divide by chip count for per-device terms.
+Conventions: MAC = 2 flops; causal attention halves the score work;
+backward = 2x forward; full remat re-runs the forward (+1x) during backward.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class CellCost:
+    flops: float  # global FLOPs per step
+    hbm_bytes: float  # global HBM traffic per step (lower bound)
+    model_flops: float  # 6*N_active*tokens (train) / 2*N_active*tokens (fwd)
+    detail: Dict[str, float]
+
+
+def _attn_flops_per_layer(cfg: ModelConfig, B: int, S: int, kv_len: int = None):
+    """QK^T + PV for one layer, causal, optional sliding window."""
+    hd = cfg.resolved_head_dim
+    H = cfg.n_heads
+    kv_len = kv_len if kv_len is not None else S
+    eff = min(kv_len, cfg.sliding_window) if cfg.sliding_window else kv_len
+    if S == kv_len:  # square causal: ~half the block is live
+        pairs = B * H * S * eff * (0.5 if eff == S else 1.0)
+    else:
+        pairs = B * H * S * eff
+    return 2 * 2 * pairs * hd  # two matmuls, MAC=2
+
+
+def _proj_flops_per_layer(cfg: ModelConfig, tokens: int):
+    """Matmul params touched per token, x2 flops (excludes attention pairs)."""
+    D, F = cfg.d_model, cfg.d_ff
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    p = 0
+    if cfg.has_attention:
+        p += D * H * hd + 2 * D * KV * hd + H * hd * D
+    if cfg.family == "moe":
+        p += D * cfg.n_experts  # router
+        p += cfg.top_k * 3 * D * F  # active experts only
+    elif F > 0:
+        p += 3 * D * F
+    if cfg.family in ("ssm", "hybrid"):
+        di, N, Hs = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        p += 2 * D * di + 2 * D * N + D * Hs + di * D
+    return 2 * p * tokens
+
+
+def _ssd_flops_per_layer(cfg: ModelConfig, B: int, S: int):
+    """Chunked SSD core (intra scores, inter state) -- see models/ssm.py."""
+    if cfg.family not in ("ssm", "hybrid"):
+        return 0.0
+    Q = min(cfg.ssm_chunk, S)
+    N, H, P = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    per_token = 2 * Q * N + 2 * Q * H * P + 8 * H * P * N
+    return B * S * per_token
+
+
+def _head_flops(cfg: ModelConfig, tokens: int):
+    return 2 * tokens * cfg.vocab_size * cfg.d_model
+
+
+def cell_cost(cfg: ModelConfig, shape: ShapeConfig) -> CellCost:
+    B, S = shape.global_batch, shape.seq_len
+    L = cfg.n_layers
+    bytes_per_param = 2  # bf16 compute copy
+
+    if shape.kind == "train":
+        tokens = B * S
+        fwd = (
+            L * (_proj_flops_per_layer(cfg, tokens)
+                 + (_attn_flops_per_layer(cfg, B, S) if cfg.has_attention else 0)
+                 + _ssd_flops_per_layer(cfg, B, S))
+            + _head_flops(cfg, tokens)
+        )
+        if cfg.family == "encdec":
+            fwd += cfg.encoder_layers * (
+                _proj_flops_per_layer(cfg, tokens)
+                + 2 * _attn_flops_per_layer(cfg, B, S)  # bidirectional
+            ) + L * (  # cross attention per decoder layer
+                2 * (cfg.d_model * cfg.n_heads * cfg.resolved_head_dim
+                     + 2 * cfg.d_model * cfg.n_kv_heads * cfg.resolved_head_dim
+                     + cfg.n_heads * cfg.resolved_head_dim * cfg.d_model) * tokens / 2
+                + 2 * _attn_flops_per_layer(cfg, B, S, kv_len=S)
+            )
+        remat_extra = fwd if cfg.remat else 0.0
+        flops = 3 * fwd + remat_extra  # fwd + 2x bwd + remat re-forward
+        n_act = cfg.n_active_params()
+        # HBM: params(bf16 r) + grads(f32 rw) + adam master/mu/nu(f32 rw) +
+        # bf16 write-back + layer-boundary activations (bf16 w+r, x2 remat)
+        n_par = cfg.n_params()
+        param_opt = n_par * (2 + 8 + 24 + 2)
+        acts = (L + (cfg.encoder_layers or 0)) * tokens * cfg.d_model * 2 * 4
+        hbm = param_opt + acts
+        return CellCost(flops, hbm, 6.0 * n_act * tokens,
+                        {"fwd": fwd, "remat": remat_extra})
+
+    if shape.kind == "prefill":
+        tokens = B * S
+        flops = (
+            L * (_proj_flops_per_layer(cfg, tokens)
+                 + (_attn_flops_per_layer(cfg, B, S) if cfg.has_attention else 0)
+                 + _ssd_flops_per_layer(cfg, B, S))
+            + _head_flops(cfg, B)  # last position only
+        )
+        if cfg.family == "encdec":
+            flops += cfg.encoder_layers * (
+                _proj_flops_per_layer(cfg, tokens)
+                + 2 * _attn_flops_per_layer(cfg, B, S)
+            )
+        n_par = cfg.n_params()
+        acts = L * tokens * cfg.d_model * 2 * 2
+        kv_write = (
+            2 * L * B * min(S, cfg.sliding_window or S)
+            * cfg.n_kv_heads * cfg.resolved_head_dim * 2
+            if cfg.has_attention else 0
+        )
+        hbm = n_par * 2 + acts + kv_write
+        return CellCost(flops, hbm, 2.0 * cfg.n_active_params() * tokens, {})
+
+    # decode: one token per sequence against a seq_len-deep cache
+    tokens = B
+    kv_len = S
+    flops = (
+        L * (_proj_flops_per_layer(cfg, tokens)
+             + (_attn_flops_per_layer(cfg, B, 1, kv_len=kv_len)
+                if cfg.has_attention else 0)
+             + (B * (2 * cfg.ssm_state * cfg.ssm_heads * cfg.ssm_head_dim * 3)
+                if cfg.family in ("ssm", "hybrid") else 0))
+        + _head_flops(cfg, tokens)
+    )
+    if cfg.family == "encdec":
+        flops += L * 2 * _attn_flops_per_layer(cfg, B, 1, kv_len=kv_len)
+    n_act = cfg.n_active_params()
+    kv_eff = min(kv_len, cfg.sliding_window) if cfg.sliding_window else kv_len
+    kv_read = (
+        2 * L * B * kv_eff * cfg.n_kv_heads * cfg.resolved_head_dim * 2
+        if cfg.has_attention else 0
+    )
+    if cfg.family == "encdec":
+        kv_read *= 2  # self + cross memory
+    ssm_state = (
+        L * B * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4 * 2
+        if cfg.family in ("ssm", "hybrid") else 0
+    )
+    hbm = n_act * 2 + kv_read + ssm_state
+    return CellCost(flops, hbm, 2.0 * n_act * tokens, {"kv_read": kv_read})

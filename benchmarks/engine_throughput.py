@@ -1,0 +1,37 @@
+"""Real-engine throughput: keys/second on this host for every strategy.
+
+This is the TPU-native performance plane (jit'd JAX); on the CPU container
+it measures real executed work, demonstrating the throughput ordering the
+partitioning strategies produce outside the cycle model.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, time_fn
+from repro.core.engine import BSTEngine, PAPER_CONFIGS
+from repro.data.keysets import make_key_sets, make_tree_data
+
+
+def run(n_keys=(1 << 16) - 1, batch=16384) -> List[Row]:
+    # batch sized so the direct-mapped engines (whose stateless dispatch is
+    # deliberately faithful-but-slow on CPU; see DESIGN.md §2) finish in
+    # seconds -- keys/s is batch-size stable for the others.
+    keys, values = make_tree_data(n_keys, seed=0)
+    rows: List[Row] = []
+    engines = {n: BSTEngine(keys, values, c) for n, c in PAPER_CONFIGS.items()}
+    sets = make_key_sets(engines["Hrz"].tree, batch)
+    for set_name, q in sets.items():
+        for name, eng in engines.items():
+            us = time_fn(eng.lookup, q, warmup=1, iters=3)
+            rows.append(
+                Row(
+                    name=f"engine/{set_name}/{name}",
+                    us_per_call=us,
+                    derived=f"keys_per_sec={batch / (us / 1e6):.3e};batch={batch}",
+                )
+            )
+    return rows

@@ -1,0 +1,75 @@
+"""Paper Fig. 7: acceleration rate vs Hrz for 64K and 256K key sets.
+
+Reproduces the paper's central result with the cycle-accurate simulator:
+  * Dup4 / Dup8: constant 4x / 8x regardless of key distribution
+  * hybrids ~ 1x on Equal (port limit), ~ Nx on Split (conflict-free)
+  * queue vs direct gap on Random (paper: 32-39%)
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import tree as T
+from repro.core.cyclesim import run_paper_matrix
+from repro.data.keysets import make_key_sets, make_tree_data
+
+TREE_KEYS = (1 << 16) - 1  # 64K-node tree (paper: up to 2^20; CPU-box scale)
+
+
+def run(sizes=(65536, 262144)) -> List[Row]:
+    keys, values = make_tree_data(TREE_KEYS, seed=0)
+    tree = T.build_tree(keys, values)
+    rows: List[Row] = []
+    for size in sizes:
+        sets = make_key_sets(tree, size)
+        t0 = time.perf_counter()
+        res = run_paper_matrix(tree, sets)
+        sim_us = (time.perf_counter() - t0) * 1e6
+        for set_name, row in res.items():
+            base = row["Hrz"]
+            for impl, r in row.items():
+                rows.append(
+                    Row(
+                        name=f"fig7/{size//1024}K/{set_name}/{impl}",
+                        us_per_call=sim_us / len(res) / len(row),
+                        derived=(
+                            f"speedup_vs_hrz={r.speedup_vs(base):.3f};"
+                            f"keys_per_cycle={r.keys_per_cycle:.3f};"
+                            f"cycles={r.cycles};stalls={r.stall_cycles}"
+                        ),
+                    )
+                )
+        # paper-claim checks (reported, asserted in tests/test_cyclesim.py)
+        rnd = res["random"]
+        for n in (4, 8):
+            d, q = rnd[f"Hyb{n}"], rnd[f"Hyb{n}q"]
+            rows.append(
+                Row(
+                    name=f"fig7/{size//1024}K/claim/queue_vs_direct_Hyb{n}",
+                    us_per_call=0.0,
+                    derived=(
+                        # two gap definitions: queue-speedup-over-direct, and
+                        # the gap as a fraction of the queue acceleration
+                        f"cycle_gain={d.cycles / q.cycles - 1:.3f};"
+                        f"accel_gap_frac_of_queue={1 - q.cycles / d.cycles:.3f};"
+                        f"paper_band=0.32-0.39"
+                    ),
+                )
+            )
+        rows.append(
+            Row(
+                name=f"fig7/{size//1024}K/claim/max_speedup",
+                us_per_call=0.0,
+                derived=(
+                    f"dup8_speedup={res['random']['Dup8'].speedup_vs(res['random']['Hrz']):.2f};"
+                    f"dup8_keys_per_cycle={res['random']['Dup8'].keys_per_cycle:.2f};"
+                    f"paper=8x_and_~16"
+                ),
+            )
+        )
+    return rows

@@ -1,0 +1,49 @@
+"""Paper Fig. 8: memory / resource utilization relative to Hrz.
+
+Memory = stored tree nodes (exact, from the engine).  LUT/logic proxies are
+modeled per the paper's qualitative findings and labeled as such: the queue
+mapping needs the labeling network + read/write pointers (more logic), the
+direct mapping is the cheapest router.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core.engine import BSTEngine, PAPER_CONFIGS
+from repro.data.keysets import make_tree_data
+
+# Modeled router-logic cost per searched key slot, normalized to Hrz = 1.0.
+# (FPGA LUT counts have no TPU analogue; see DESIGN.md §2 "what does NOT
+# transfer".  Constants chosen to reproduce the paper's qualitative ordering
+# Hrz < Dup < Hyb-direct < Hyb-queue.)
+LOGIC_PROXY = {
+    "Hrz": 1.0,
+    "Dup4": 4.0,
+    "Dup8": 8.0,
+    "Hyb4": 4.6,
+    "Hyb4q": 6.0,
+    "Hyb8": 9.2,
+    "Hyb8q": 12.0,
+}
+
+
+def run() -> List[Row]:
+    keys, values = make_tree_data((1 << 14) - 1, seed=0)
+    engines = {n: BSTEngine(keys, values, c) for n, c in PAPER_CONFIGS.items()}
+    base = engines["Hrz"].memory_nodes()
+    rows = []
+    for name, eng in engines.items():
+        rows.append(
+            Row(
+                name=f"fig8/{name}",
+                us_per_call=0.0,
+                derived=(
+                    f"memory_nodes={eng.memory_nodes()};"
+                    f"memory_vs_hrz={eng.memory_nodes() / base:.2f};"
+                    f"logic_proxy_vs_hrz={LOGIC_PROXY[name]:.1f}"
+                ),
+            )
+        )
+    return rows

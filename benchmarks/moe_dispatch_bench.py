@@ -1,0 +1,43 @@
+"""MoE dispatch drop-rates: the paper's direct-vs-queue trade-off inside the
+Mixtral FFN (the Fig.5/Fig.6 behaviour surfaced at the model level).
+
+Sweeps capacity_factor and reports the dropped-assignment fraction per
+mapping; queue must dominate direct at every capacity (tests assert it)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs import smoke_config
+from repro.core import buffers as B
+
+
+def run() -> List[Row]:
+    cfg = smoke_config("mixtral_8x7b")
+    rng = np.random.default_rng(0)
+    rows: List[Row] = []
+    T_, E, K = 4096, 8, 2
+    # router-like skewed expert choice (zipf-ish), the realistic stress case
+    probs = np.array([2.0 ** (-i) for i in range(E)])
+    probs /= probs.sum()
+    for skew, name in ((None, "uniform"), (probs, "skewed")):
+        dest = rng.choice(E, size=T_ * K, p=skew).astype(np.int32)
+        for cf in (0.5, 1.0, 1.25, 2.0):
+            cap = max(1, int(T_ * K / E * cf))
+            for mapping in ("queue", "direct"):
+                plan = B.dispatch(mapping, jnp.asarray(dest), E, cap)
+                dropped = 1 - float(plan.kept.sum()) / (T_ * K)
+                rows.append(
+                    Row(
+                        name=f"moe_dispatch/{name}/cf{cf}/{mapping}",
+                        us_per_call=0.0,
+                        derived=f"dropped_frac={dropped:.4f};capacity={cap}",
+                    )
+                )
+    return rows

@@ -1,0 +1,200 @@
+"""Roofline analysis per (arch x shape) from the dry-run artifacts.
+
+Three terms, in seconds (TPU v5e constants):
+  compute    = FLOPs / (chips * 197e12)          [analytic model, see
+               analytic_model.py -- XLA cost_analysis undercounts scanned
+               bodies; validated against unrolled HLO in tests]
+  memory     = HBM bytes / (chips * 819e9)       [analytic lower bound]
+  collective = wire bytes / (chips * 50e9)       [HLO-parsed, loop-trip
+               multiplied, wire multipliers: AR 2x result, AG/RS/A2A/CP 1x]
+
+Dominant term = the bottleneck; the §Perf loop iterates on it.
+Reads experiments/dryrun/*.json, writes experiments/roofline.md.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.analytic_model import cell_cost
+from benchmarks.common import Row
+from repro.configs import ARCH_IDS, canonical, get_config
+from repro.models.config import SHAPES
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link (bandwidth-dominant direction)
+
+WIRE_MULT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+DRYRUN_DIR = os.environ.get(
+    "ROOFLINE_DRYRUN_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun"),
+)
+
+
+def load_cells(mesh: str = "single", directory: Optional[str] = None) -> Dict[str, dict]:
+    out = {}
+    for f in glob.glob(os.path.join(directory or DRYRUN_DIR, f"*_{mesh}.json")):
+        rec = json.load(open(f))
+        if "arch" not in rec:  # e.g. bst_engine_*.json (own roofline format)
+            continue
+        if rec.get("tag"):  # perf-variant artifacts live in §Perf, not here
+            continue
+        out[f"{canonical(rec['arch'])}|{rec['shape']}"] = rec
+    return out
+
+
+def wire_bytes(collectives: dict) -> float:
+    total = 0.0
+    for op, mult in WIRE_MULT.items():
+        if op in collectives:
+            total += collectives[op]["bytes"] * mult
+    return total
+
+
+def analyze_cell(rec: dict, chips: int = 256) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    cfg = get_config(canonical(rec["arch"]))
+    shape = SHAPES[rec["shape"]]
+    cost = cell_cost(cfg, shape)
+    t_compute = cost.flops / (chips * PEAK_FLOPS)
+    t_memory = cost.hbm_bytes / (chips * HBM_BW)
+    # collective bytes in the JSON are per-device program bytes already
+    wb = wire_bytes(rec.get("collectives", {}))
+    t_coll = wb / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    frac = t_compute / bound if bound > 0 else 0.0
+    hlo_flops = rec.get("cost_analysis", {}).get("flops", 0.0)
+    return {
+        "arch": canonical(rec["arch"]),
+        "shape": rec["shape"],
+        "chips": chips,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "roofline_fraction": frac,  # compute / dominant: 1.0 == compute-bound
+        "model_flops": cost.model_flops,
+        "analytic_flops": cost.flops,
+        "useful_ratio": cost.model_flops / cost.flops if cost.flops else 0.0,
+        "hlo_flops_raw_per_device": hlo_flops,
+        "collective_wire_bytes_per_device": wb,
+        "mem_peak_bytes_per_device": rec.get("memory_analysis", {}).get(
+            "peak_per_device_bytes", 0
+        ),
+        "lever": _lever(dominant, cfg, shape),
+    }
+
+
+def _lever(dominant: str, cfg, shape) -> str:
+    if dominant == "compute":
+        return (
+            "compute-bound: raise MFU via MXU-aligned tiles / fused kernels; "
+            "remat policy trades the +1x forward recompute against HBM"
+        )
+        # noqa
+    if dominant == "memory":
+        if shape.kind == "decode":
+            return (
+                "KV/weight streaming bound: shrink cache reads (GQA already; "
+                "quantize KV to int8, shard window over more chips)"
+            )
+        return "activation traffic: fuse norms/rope, wider microbatch, bf16 master"
+    return (
+        "collective-bound: reshard to cut all-gathers (seq-shard logits, "
+        "overlap DP all-reduce with backward scan, compress grads)"
+    )
+
+
+def run() -> List[Row]:
+    cells = load_cells("single")
+    rows: List[Row] = []
+    for key in sorted(cells):
+        a = analyze_cell(cells[key])
+        if a is None:
+            continue
+        rows.append(
+            Row(
+                name=f"roofline/{a['arch']}/{a['shape']}",
+                us_per_call=a["t_compute_s"] * 1e6,
+                derived=(
+                    f"dominant={a['dominant']};"
+                    f"t_compute={a['t_compute_s']:.4f}s;"
+                    f"t_memory={a['t_memory_s']:.4f}s;"
+                    f"t_collective={a['t_collective_s']:.4f}s;"
+                    f"roofline_frac={a['roofline_fraction']:.3f};"
+                    f"useful_ratio={a['useful_ratio']:.3f}"
+                ),
+            )
+        )
+    return rows
+
+
+def write_markdown(
+    path: str,
+    mesh: str = "single",
+    chips: int = 256,
+    directory: Optional[str] = None,
+    title: str = "",
+) -> str:
+    cells = load_cells(mesh, directory)
+    lines = [
+        f"### Roofline table {title}({mesh}-pod, {chips} chips, v5e: 197 TF/s bf16, "
+        "819 GB/s HBM, 50 GB/s ICI)",
+        "",
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) | "
+        "dominant | compute/dominant | 6ND/analytic | lever |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    skipped = []
+    for key in sorted(cells):
+        rec = cells[key]
+        if rec.get("status") == "skipped":
+            skipped.append(f"- {rec['arch']} x {rec['shape']}: {rec['skip_reason']}")
+            continue
+        a = analyze_cell(rec, chips)
+        if a is None:
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | - | - | - | ERROR | - | - | "
+                f"{rec.get('error','')[:60]} |"
+            )
+            continue
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['t_compute_s']:.4f} | "
+            f"{a['t_memory_s']:.4f} | {a['t_collective_s']:.4f} | "
+            f"**{a['dominant']}** | {a['roofline_fraction']:.2f} | "
+            f"{a['useful_ratio']:.2f} | {a['lever']} |"
+        )
+    if skipped:
+        lines += ["", "Skipped cells (documented in DESIGN.md §4):", *skipped]
+    text = "\n".join(lines)
+    with open(path, "w") as f:
+        f.write(text + "\n")
+    return text
+
+
+if __name__ == "__main__":
+    exp = os.path.join(os.path.dirname(__file__), "..", "experiments")
+    print(write_markdown(os.path.join(exp, "roofline.md"), title="— paper-faithful baseline "))
+    opt_dir = os.path.join(exp, "dryrun_opt")
+    if os.path.isdir(opt_dir) and glob.glob(os.path.join(opt_dir, "*_single.json")):
+        print(
+            write_markdown(
+                os.path.join(exp, "roofline_optimized.md"),
+                directory=opt_dir,
+                title="— optimized defaults ",
+            )
+        )

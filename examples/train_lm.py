@@ -1,0 +1,40 @@
+"""Train a small LM end-to-end with the full framework stack.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen3-1.7b --steps 200
+
+Uses the reduced (smoke) architecture config on CPU: real data pipeline,
+AdamW + cosine schedule, grad clipping, checkpointing every 50 steps, and
+restart-resume -- the same code path the launcher runs at scale.
+"""
+
+import argparse
+import tempfile
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+    ckpt = tempfile.mkdtemp(prefix="train_lm_ckpt_")
+    print(f"checkpoints -> {ckpt}")
+    train_main(
+        [
+            "--arch", args.arch,
+            "--steps", str(args.steps),
+            "--batch", str(args.batch),
+            "--seq", str(args.seq),
+            "--smoke",
+            "--ckpt-dir", ckpt,
+            "--ckpt-every", "50",
+            "--lr", "3e-3",
+        ]
+    )
+
+
+if __name__ == "__main__":
+    main()

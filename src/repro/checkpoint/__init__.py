@@ -1,0 +1,13 @@
+from repro.checkpoint.store import (
+    CheckpointManager,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.checkpoint.elastic import reshard_state
+
+__all__ = [
+    "CheckpointManager",
+    "restore_checkpoint",
+    "save_checkpoint",
+    "reshard_state",
+]

@@ -1,0 +1,51 @@
+"""Elastic scaling: restore a checkpoint onto a different mesh.
+
+Failure model at 1000+ nodes: a pod (or slice) dies; the job restarts on the
+surviving slice with fewer devices (or a repaired, larger one).  Because
+checkpoints are stored unsharded-logical (store.py) and sharding specs are
+pure functions of (config, mesh) (sharding/specs.py), resharding is just
+``device_put`` with the new mesh's NamedShardings -- no format migration.
+
+``reshard_state`` also handles the global-batch bookkeeping: the data
+pipeline is stateless in step (data/pipeline.py), so the restored run simply
+continues at the checkpointed step with the new host layout.
+
+The straggler/failure *driver* policy (deadlines, slice re-election) lives
+in launch/train.py; this module is only the state mechanics, kept separate
+so it is unit-testable on CPU with fake device counts.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def reshard_state(state: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    """Place a (host/unsharded) TrainState onto ``mesh`` per the specs."""
+    from repro.sharding.specs import state_specs
+
+    specs = state_specs(cfg, mesh)
+
+    def put(leaf, spec):
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree.map(
+        put, state, specs, is_leaf=lambda x: x is None
+    )
+
+
+def reshard_params(params: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    from repro.sharding.specs import param_specs
+
+    specs = param_specs(cfg, mesh)
+    return jax.tree.map(
+        lambda leaf, spec: jax.device_put(leaf, NamedSharding(mesh, spec)),
+        params,
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

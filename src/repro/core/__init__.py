@@ -1,0 +1,48 @@
+"""Core library: the paper's BST accelerator, TPU-native.
+
+Two planes (see DESIGN.md §3):
+  * cycle-accurate reproduction of the FPGA semantics -> ``cyclesim``
+  * high-performance JAX/Pallas engine               -> ``engine``/``distributed``
+"""
+
+from repro.core.buffers import (
+    DispatchPlan,
+    combine_to_chunk,
+    direct_dispatch,
+    dispatch,
+    gather_from_buffers,
+    queue_dispatch,
+)
+from repro.core.cyclesim import SimResult, run_paper_matrix, simulate
+from repro.core.distributed import make_distributed_lookup, make_dup_lookup
+from repro.core.engine import PAPER_CONFIGS, BSTEngine, EngineConfig
+from repro.core.tree import (
+    SENTINEL_KEY,
+    SENTINEL_VALUE,
+    TreeData,
+    build_tree,
+    search_reference,
+)
+from repro.core.updates import bulk_delete, bulk_insert, sorted_view
+
+__all__ = [
+    "BSTEngine",
+    "DispatchPlan",
+    "EngineConfig",
+    "PAPER_CONFIGS",
+    "SENTINEL_KEY",
+    "SENTINEL_VALUE",
+    "SimResult",
+    "TreeData",
+    "build_tree",
+    "combine_to_chunk",
+    "direct_dispatch",
+    "dispatch",
+    "gather_from_buffers",
+    "make_distributed_lookup",
+    "make_dup_lookup",
+    "queue_dispatch",
+    "run_paper_matrix",
+    "search_reference",
+    "simulate",
+]

@@ -1,0 +1,172 @@
+"""Direct- and queue-mapped dispatch buffers (paper §II.C.3), vectorized.
+
+The paper routes keys leaving the register layer into per-subtree buffers:
+
+* **Direct mapping** -- key at chunk index ``i`` may only occupy slot ``i`` of
+  its destination buffer.  Cheap routing; spurious stalls when slot ``i`` is
+  busy while other slots are free.
+* **Queue mapping** -- same-destination keys are *labeled* 0,1,2,... within the
+  chunk (a segmented prefix sum) and stored at ``write_ptr + label``.  Dense
+  packing, FIFO order, fewer stalls, at the cost of the labeling network.
+
+On TPU the labeling network is a cumulative sum over vector lanes -- cheap --
+which is exactly the capacity-based token dispatch used by MoE routers.  These
+primitives therefore serve double duty: they implement the BST engine's hybrid
+partitioning *and* the Mixtral expert dispatch (see models/moe.py).
+
+All functions are shape-polymorphic pure JAX and jit/vmap/shard_map safe.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DispatchPlan(NamedTuple):
+    """Result of mapping a chunk of items onto (n_dest, capacity) buffers.
+
+    slot:     (B,) int32 -- assigned slot within the destination buffer, or -1
+              when the item overflowed (it must retry in a later round: the
+              software analogue of the paper's frontend stall).
+    kept:     (B,) bool  -- item landed in a buffer this round.
+    buffers:  (n_dest, capacity) int32 -- chunk indices, -1 for empty slots.
+    counts:   (n_dest,) int32 -- occupied slots per destination.
+    overflow: (B,) bool  -- ~kept for active items.
+    """
+
+    slot: jax.Array
+    kept: jax.Array
+    buffers: jax.Array
+    counts: jax.Array
+    overflow: jax.Array
+
+
+def _scatter_buffers(
+    dest: jax.Array, slot: jax.Array, kept: jax.Array, n_dest: int, capacity: int
+) -> jax.Array:
+    """Scatter chunk indices into the (n_dest, capacity) buffer image."""
+    B = dest.shape[0]
+    flat = jnp.full((n_dest * capacity,), -1, dtype=jnp.int32)
+    lin = jnp.where(kept, dest * capacity + slot, n_dest * capacity)
+    flat = jnp.concatenate([flat, jnp.zeros((1,), jnp.int32)])  # overflow sink
+    flat = flat.at[lin].set(jnp.arange(B, dtype=jnp.int32), mode="drop")
+    return flat[:-1].reshape(n_dest, capacity)
+
+
+def queue_dispatch(
+    dest: jax.Array,
+    n_dest: int,
+    capacity: int,
+    active: jax.Array | None = None,
+    base: jax.Array | None = None,
+) -> DispatchPlan:
+    """Queue mapping: slot = write_ptr(dest) + |earlier same-dest items|.
+
+    ``base`` optionally carries the per-destination write pointers (occupancy)
+    from previous rounds, so stateful cycle simulation and stateless MoE
+    dispatch share one primitive.
+    """
+    B = dest.shape[0]
+    active = (dest >= 0) if active is None else (active & (dest >= 0))
+    dest = jnp.where(active, dest, -1)
+    # Segmented prefix count: label[i] = #{j < i : dest[j] == dest[i]}.
+    onehot = jax.nn.one_hot(dest, n_dest, dtype=jnp.int32)  # (B, n_dest)
+    label = jnp.cumsum(onehot, axis=0) - onehot  # exclusive
+    label = jnp.take_along_axis(
+        label, jnp.clip(dest, 0, n_dest - 1)[:, None], axis=1
+    )[:, 0]
+    if base is not None:
+        label = label + base[jnp.clip(dest, 0, n_dest - 1)]
+    slot = jnp.where(active, label, -1)
+    kept = active & (slot >= 0) & (slot < capacity)
+    slot = jnp.where(kept, slot, -1)
+    counts = jnp.sum(
+        jax.nn.one_hot(jnp.where(kept, dest, -1), n_dest, dtype=jnp.int32), axis=0
+    )
+    buffers = _scatter_buffers(dest, slot, kept, n_dest, capacity)
+    return DispatchPlan(slot, kept, buffers, counts, active & ~kept)
+
+
+def direct_dispatch(
+    dest: jax.Array,
+    n_dest: int,
+    capacity: int,
+    active: jax.Array | None = None,
+    occupied: jax.Array | None = None,
+) -> DispatchPlan:
+    """Direct mapping: item at chunk index ``i`` may only use slot ``i % capacity``.
+
+    ``occupied`` optionally carries per-(dest, slot) occupancy from previous
+    rounds (the cycle simulator's buffer image); a set bit blocks placement
+    even when other slots are free -- the paper's spurious-stall case.
+    Within a single chunk two items can also collide on (dest, slot) when
+    B > capacity; the earlier item wins, as in hardware.
+    """
+    B = dest.shape[0]
+    active = (dest >= 0) if active is None else (active & (dest >= 0))
+    dest = jnp.where(active, dest, -1)
+    idx = jnp.arange(B, dtype=jnp.int32)
+    slot = idx % capacity
+
+    blocked = jnp.zeros((B,), dtype=bool)
+    if occupied is not None:
+        blocked = occupied[jnp.clip(dest, 0, n_dest - 1), slot] & active
+
+    # Intra-chunk collision: same (dest, slot) pair claimed twice.
+    pair = dest * capacity + slot
+    onehot = jax.nn.one_hot(pair, n_dest * capacity, dtype=jnp.int32)
+    earlier = jnp.cumsum(onehot, axis=0) - onehot
+    clash = (
+        jnp.take_along_axis(earlier, jnp.clip(pair, 0, None)[:, None], axis=1)[:, 0]
+        > 0
+    )
+    kept = active & ~blocked & ~clash
+    slot = jnp.where(kept, slot, -1)
+    counts = jnp.sum(
+        jax.nn.one_hot(jnp.where(kept, dest, -1), n_dest, dtype=jnp.int32), axis=0
+    )
+    buffers = _scatter_buffers(dest, slot, kept, n_dest, capacity)
+    return DispatchPlan(slot, kept, buffers, counts, active & ~kept)
+
+
+def dispatch(
+    mapping: str,
+    dest: jax.Array,
+    n_dest: int,
+    capacity: int,
+    active: jax.Array | None = None,
+) -> DispatchPlan:
+    if mapping == "queue":
+        return queue_dispatch(dest, n_dest, capacity, active)
+    if mapping == "direct":
+        return direct_dispatch(dest, n_dest, capacity, active)
+    raise ValueError(f"unknown mapping {mapping!r} (want 'direct' or 'queue')")
+
+
+def gather_from_buffers(
+    items: jax.Array, buffers: jax.Array, fill_value=0
+) -> jax.Array:
+    """Materialize buffered items: (B, ...) -> (n_dest, capacity, ...)."""
+    safe = jnp.clip(buffers, 0, items.shape[0] - 1)
+    out = items[safe]
+    mask = (buffers >= 0).reshape(buffers.shape + (1,) * (items.ndim - 1))
+    return jnp.where(mask, out, fill_value)
+
+
+def combine_to_chunk(
+    per_dest: jax.Array, buffers: jax.Array, chunk_size: int, fill_value=0
+) -> jax.Array:
+    """Inverse of gather_from_buffers: (n_dest, capacity, ...) -> (B, ...)."""
+    flat_idx = buffers.reshape(-1)
+    flat_val = per_dest.reshape((-1,) + per_dest.shape[2:])
+    out_shape = (chunk_size,) + per_dest.shape[2:]
+    out = jnp.full(out_shape, fill_value, dtype=per_dest.dtype)
+    sink = jnp.where(flat_idx >= 0, flat_idx, chunk_size)
+    out = jnp.concatenate(
+        [out, jnp.zeros((1,) + per_dest.shape[2:], per_dest.dtype)]
+    )
+    out = out.at[sink].set(flat_val, mode="drop")
+    return out[:-1]

@@ -1,0 +1,189 @@
+"""Multi-chip hybrid partitioning: the paper's key router as a collective.
+
+On the FPGA, vertical partitioning splits the tree into subtrees that live in
+disjoint BRAM groups, and a routing network moves keys from the register
+layer to the right subtree.  On a TPU pod the disjoint memories are *chips*:
+
+  * the register layer (top ``log2(M)`` levels, a few KiB) is REPLICATED on
+    every chip -- exactly the port-less register file;
+  * subtree ``s`` lives in chip ``s``'s HBM (sharded over the ``model`` axis);
+  * the routing network is an ``all_to_all``: after the local register-layer
+    descent, each chip posts (dest -> key) buffers built by the paper's
+    queue mapping, and the collective delivers each subtree its keys;
+  * results ride the inverse all_to_all back to the requesting chip.
+
+Tree *duplication* (DupN) is replication over the ``data``/``pod`` axes: each
+replica group serves its own query stream -- plain data parallelism, included
+here for completeness via ``dup_lookup``.
+
+Buffer capacity is the collective-bytes lever (§Perf): capacity == local
+batch is stall-free but sends B x M keys; smaller capacities send less and
+handle overflow with an extra "stall round", faithfully mirroring the
+paper's throughput/buffer-size trade-off.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import buffers as buf
+from repro.core import tree as tree_lib
+from repro.core.tree import TreeData
+
+
+def shard_subtrees(
+    tree: TreeData, mesh: Mesh, axis: str
+) -> Tuple[jax.Array, jax.Array, int, int]:
+    """Vertical-partition the tree across ``axis``: (M, sub_n) arrays."""
+    M = mesh.shape[axis]
+    split_level = int(math.log2(M))
+    if (1 << split_level) != M:
+        raise ValueError(f"mesh axis {axis} size {M} must be a power of two")
+    if split_level > tree.height:
+        raise ValueError("tree shallower than the mesh axis")
+    idx = tree_lib.all_subtree_gather_indices(tree.height, split_level)
+    sub_keys = jnp.asarray(np.asarray(tree.keys)[idx])
+    sub_vals = jnp.asarray(np.asarray(tree.values)[idx])
+    sharding = NamedSharding(mesh, P(axis, None))
+    sub_keys = jax.device_put(sub_keys, sharding)
+    sub_vals = jax.device_put(sub_vals, sharding)
+    return sub_keys, sub_vals, split_level, tree.height - split_level
+
+
+def make_distributed_lookup(
+    tree: TreeData,
+    mesh: Mesh,
+    axis: str = "model",
+    capacity: Optional[int] = None,
+    stall_rounds: int = 1,
+):
+    """Build a jitted distributed lookup over ``axis``.
+
+    queries: (B_global,) sharded over ``axis``; returns (values, found) with
+    the same sharding.  ``capacity`` is the per-(src,dst) buffer depth; None
+    means stall-free (capacity = local batch).  ``stall_rounds`` extra rounds
+    re-dispatch overflowed keys (paper: frontend stall while buffers drain).
+    """
+    M = mesh.shape[axis]
+    sub_keys, sub_vals, split_level, sub_height = shard_subtrees(tree, mesh, axis)
+    reg_keys, reg_vals = tree.register_layer(max(split_level, 1))
+    reg_keys = jax.device_put(reg_keys, NamedSharding(mesh, P()))
+    reg_vals = jax.device_put(reg_vals, NamedSharding(mesh, P()))
+    reg_tree = TreeData(reg_keys, reg_vals, max(split_level, 1) - 1, int(reg_keys.shape[0]))
+
+    def _route_local(queries):
+        """Register-layer descent (replicated constants)."""
+        if split_level == 0:
+            B = queries.shape[0]
+            return (
+                jnp.zeros((B,), jnp.int32),
+                jnp.full((B,), tree_lib.SENTINEL_VALUE, jnp.int32),
+                jnp.zeros((B,), bool),
+            )
+        dest, val, found = tree_lib.register_layer_route(
+            TreeData(reg_keys, reg_vals, split_level - 1, int(reg_keys.shape[0])),
+            queries,
+            split_level,
+        )
+        return dest, val, found
+
+    def _one_round(queries, dest, active, sub_k, sub_v, cap):
+        """dispatch -> all_to_all -> local subtree search -> all_to_all back."""
+        plan = buf.queue_dispatch(dest, M, cap, active=active)
+        send_q = buf.gather_from_buffers(queries, plan.buffers, fill_value=0)
+        send_live = plan.buffers >= 0
+        # (M, C): row d goes to chip d; receive row s = keys from chip s.
+        recv_q = jax.lax.all_to_all(send_q, axis, 0, 0, tiled=False)
+        recv_live = jax.lax.all_to_all(send_live.astype(jnp.int32), axis, 0, 0, tiled=False)
+        flat_q = recv_q.reshape(-1)
+        flat_live = recv_live.reshape(-1) != 0
+        vals, found = tree_lib.subtree_search(
+            sub_k[0], sub_v[0], sub_height, flat_q, flat_live
+        )
+        back_v = jax.lax.all_to_all(vals.reshape(M, cap), axis, 0, 0, tiled=False)
+        back_f = (
+            jax.lax.all_to_all(
+                found.astype(jnp.int32).reshape(M, cap), axis, 0, 0, tiled=False
+            )
+            != 0
+        )
+        B = queries.shape[0]
+        got_v = buf.combine_to_chunk(
+            back_v, plan.buffers, B, fill_value=tree_lib.SENTINEL_VALUE
+        )
+        got_f = buf.combine_to_chunk(back_f, plan.buffers, B, fill_value=False)
+        return got_v, got_f, plan.overflow
+
+    def _lookup_local(queries, sub_k, sub_v):
+        B = queries.shape[0]
+        cap = capacity if capacity is not None else B
+        dest, val, found = _route_local(queries)
+        active = ~found
+        got_v, got_f, overflow = _one_round(queries, dest, active, sub_k, sub_v, cap)
+        val = jnp.where(active & ~overflow, got_v, val)
+        found = found | got_f
+        # Stall rounds: overflowed keys re-enter, buffers now empty.
+        for _ in range(stall_rounds if capacity is not None else 0):
+            got_v, got_f, overflow = _one_round(
+                queries, dest, overflow, sub_k, sub_v, cap
+            )
+            val = jnp.where(got_f, got_v, val)
+            found = found | got_f
+        return val, found
+
+    lookup = jax.jit(
+        jax.shard_map(
+            _lookup_local,
+            mesh=mesh,
+            in_specs=(P(axis), P(axis, None), P(axis, None)),
+            out_specs=(P(axis), P(axis)),
+            check_vma=False,
+        )
+    )
+
+    def run(queries: jax.Array):
+        queries = jax.device_put(
+            jnp.asarray(queries, jnp.int32), NamedSharding(mesh, P(axis))
+        )
+        return lookup(queries, sub_keys, sub_vals)
+
+    run.mesh = mesh
+    run.capacity = capacity
+    run.split_level = split_level
+    return run
+
+
+def make_dup_lookup(tree: TreeData, mesh: Mesh, axis: str = "data"):
+    """DupN as data parallelism: replicate the tree, shard the query stream."""
+    keys = jax.device_put(tree.keys, NamedSharding(mesh, P()))
+    vals = jax.device_put(tree.values, NamedSharding(mesh, P()))
+    rep = TreeData(keys, vals, tree.height, tree.n_real)
+
+    def _local(queries):
+        return tree_lib.search_reference(rep, queries)
+
+    lookup = jax.jit(
+        jax.shard_map(
+            _local,
+            mesh=mesh,
+            in_specs=P(axis),
+            out_specs=(P(axis), P(axis)),
+            check_vma=False,
+        )
+    )
+
+    def run(queries: jax.Array):
+        queries = jax.device_put(
+            jnp.asarray(queries, jnp.int32), NamedSharding(mesh, P(axis))
+        )
+        return lookup(queries)
+
+    run.mesh = mesh
+    return run

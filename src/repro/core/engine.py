@@ -1,0 +1,205 @@
+"""BSTEngine: the TPU-native lookup engine with the paper's four strategies.
+
+Strategies (paper §II):
+  * ``hrz``   -- horizontal partitioning.  One tree, level-major layout, the
+                 whole query chunk descends one level per step: the SIMD
+                 rendition of the FPGA's level pipeline.
+  * ``dup``   -- duplicated horizontal partitioning.  ``n_trees`` replicas;
+                 on one chip this splits the chunk across replicas (pure
+                 bandwidth trade), across chips it becomes data parallelism.
+  * ``hyb``   -- hybrid horizontal-vertical partitioning.  The top
+                 ``register_levels`` levels are a broadcast "register layer";
+                 survivors are routed to ``n_trees`` vertical subtrees through
+                 direct- or queue-mapped buffers and descend locally.
+
+All strategies return bit-identical results (property-tested); they differ in
+memory layout, dispatch traffic and -- in the distributed engine -- collective
+pattern.  Functional equivalence is exactly the paper's situation: every
+implementation finds the same keys, only throughput differs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import buffers as buf
+from repro.core import tree as tree_lib
+from repro.core.tree import TreeData
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Compile-time reconfigurable parameters (paper: "fully reconfigurable")."""
+
+    strategy: str = "hrz"  # hrz | dup | hyb
+    n_trees: int = 1  # replicas (dup) or vertical subtrees (hyb)
+    mapping: str = "queue"  # direct | queue   (hyb only)
+    register_levels: Optional[int] = None  # default: log2(n_trees) for hyb
+    # Buffer capacity per subtree as a multiple of the fair share B/n_trees.
+    buffer_slack: float = 2.0
+    use_kernel: bool = False  # route descent through the Pallas kernel
+    interpret: bool = True  # Pallas interpret mode (CPU container)
+
+    def resolved_register_levels(self) -> int:
+        if self.register_levels is not None:
+            return self.register_levels
+        return max(1, int(math.log2(max(self.n_trees, 2))))
+
+    @property
+    def name(self) -> str:
+        if self.strategy == "hrz":
+            return "Hrz"
+        if self.strategy == "dup":
+            return f"Dup{self.n_trees}"
+        suffix = "q" if self.mapping == "queue" else ""
+        return f"Hyb{self.n_trees}{suffix}"
+
+
+# Preset configurations matching the paper's evaluated implementations.
+PAPER_CONFIGS = {
+    "Hrz": EngineConfig(strategy="hrz"),
+    "Dup4": EngineConfig(strategy="dup", n_trees=4),
+    "Dup8": EngineConfig(strategy="dup", n_trees=8),
+    "Hyb4": EngineConfig(strategy="hyb", n_trees=4, mapping="direct"),
+    "Hyb4q": EngineConfig(strategy="hyb", n_trees=4, mapping="queue"),
+    "Hyb8": EngineConfig(strategy="hyb", n_trees=8, mapping="direct"),
+    "Hyb8q": EngineConfig(strategy="hyb", n_trees=8, mapping="queue"),
+}
+
+
+class BSTEngine:
+    """Build once, look up batches of keys many times."""
+
+    def __init__(self, keys, values, config: EngineConfig = EngineConfig()):
+        self.config = config
+        self.tree = tree_lib.build_tree(np.asarray(keys), np.asarray(values))
+        self._prepare()
+        self._lookup = jax.jit(self._lookup_impl)
+
+    # ------------------------------------------------------------------ build
+    def _prepare(self) -> None:
+        cfg, t = self.config, self.tree
+        if cfg.strategy == "hyb":
+            r = cfg.resolved_register_levels()
+            if (1 << r) < cfg.n_trees:
+                raise ValueError(
+                    f"register_levels={r} exposes {1 << r} subtrees < n_trees={cfg.n_trees}"
+                )
+            if r > t.height:
+                raise ValueError("register layer deeper than the tree")
+            self.split_level = int(math.log2(cfg.n_trees))
+            if self.split_level != math.log2(cfg.n_trees):
+                raise ValueError("n_trees must be a power of two")
+            # Register layer = levels [0, split_level); subtrees hang below.
+            idx = tree_lib.all_subtree_gather_indices(t.height, self.split_level)
+            self.sub_keys = t.keys[jnp.asarray(idx)]  # (n_trees, sub_n)
+            self.sub_values = t.values[jnp.asarray(idx)]
+            self.sub_height = t.height - self.split_level
+        elif cfg.strategy == "dup":
+            if cfg.n_trees < 1:
+                raise ValueError("dup needs n_trees >= 1")
+        elif cfg.strategy != "hrz":
+            raise ValueError(f"unknown strategy {cfg.strategy!r}")
+
+    # ----------------------------------------------------------------- lookup
+    def lookup(self, queries) -> Tuple[jax.Array, jax.Array]:
+        """(values, found) for a 1-D int32 query batch."""
+        queries = jnp.asarray(queries, dtype=jnp.int32)
+        return self._lookup(queries)
+
+    def _lookup_impl(self, queries: jax.Array):
+        cfg = self.config
+        if cfg.strategy == "hrz":
+            return self._search_whole(queries)
+        if cfg.strategy == "dup":
+            # n_trees replicas each take a contiguous slice of the chunk.
+            B = queries.shape[0]
+            n = cfg.n_trees
+            pad = (-B) % n
+            q = jnp.pad(queries, (0, pad)).reshape(n, -1)
+            vals, found = jax.vmap(self._search_whole)(q)
+            return vals.reshape(-1)[:B], found.reshape(-1)[:B]
+        return self._lookup_hybrid(queries)
+
+    def _search_whole(self, queries: jax.Array):
+        if self.config.use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.bst_search(
+                self.tree.keys,
+                self.tree.values,
+                queries,
+                height=self.tree.height,
+                interpret=self.config.interpret,
+            )
+        return tree_lib.search_reference(self.tree, queries)
+
+    def _lookup_hybrid(self, queries: jax.Array):
+        cfg, t = self.config, self.tree
+        B = queries.shape[0]
+        n = cfg.n_trees
+        # Phase 1: register layer (broadcast storage, no port limit).
+        dest, reg_val, reg_found = tree_lib.register_layer_route(
+            t, queries, self.split_level
+        )
+        active = ~reg_found
+        # Phase 2: buffer dispatch (the paper's direct/queue mapping).
+        capacity = int(math.ceil(B / n * cfg.buffer_slack))
+        plan = buf.dispatch(cfg.mapping, dest, n, capacity, active=active)
+        per_sub_q = buf.gather_from_buffers(queries, plan.buffers, fill_value=0)
+        per_sub_active = plan.buffers >= 0
+        # Phase 3: per-subtree descent (vmapped over vertical partitions).
+        if cfg.use_kernel:
+            from repro.kernels import ops as kops
+
+            sub_vals, sub_found = jax.vmap(
+                lambda k, v, q, a: kops.bst_search(
+                    k,
+                    v,
+                    q,
+                    height=self.sub_height,
+                    active=a,
+                    interpret=cfg.interpret,
+                )
+            )(self.sub_keys, self.sub_values, per_sub_q, per_sub_active)
+        else:
+            sub_vals, sub_found = jax.vmap(
+                lambda k, v, q, a: tree_lib.subtree_search(
+                    k, v, self.sub_height, q, a
+                )
+            )(self.sub_keys, self.sub_values, per_sub_q, per_sub_active)
+        # Phase 4: combine.  Overflowed items (plan.overflow) retry through a
+        # stall round -- the software analogue of the frontend stall.
+        got_val = buf.combine_to_chunk(
+            sub_vals, plan.buffers, B, fill_value=tree_lib.SENTINEL_VALUE
+        )
+        got_found = buf.combine_to_chunk(sub_found, plan.buffers, B, fill_value=False)
+        val = jnp.where(reg_found, reg_val, got_val)
+        found = reg_found | got_found
+
+        def retry(args):
+            val, found = args
+            # Stall round: the overflowed minority re-descends the whole tree.
+            r_val, r_found = tree_lib.search_reference(t, queries)
+            val = jnp.where(plan.overflow, r_val, val)
+            found = jnp.where(plan.overflow, r_found, found)
+            return val, found
+
+        val, found = jax.lax.cond(
+            jnp.any(plan.overflow), retry, lambda a: a, (val, found)
+        )
+        return val, found
+
+    # ------------------------------------------------------------- accounting
+    def memory_nodes(self) -> int:
+        """Stored nodes (the paper's Fig. 8 memory metric)."""
+        if self.config.strategy == "dup":
+            return self.tree.n_nodes * self.config.n_trees
+        return self.tree.n_nodes

@@ -1,0 +1,261 @@
+"""Complete-BST construction and level-major (Eytzinger/BFS) layout.
+
+The paper stores 32-bit key / 32-bit value pairs of a *complete* binary tree
+level-by-level in separate BRAM partitions.  The software analogue of "one
+BRAM partition per level" is the BFS (a.k.a. Eytzinger) layout: node ``i``'s
+children are ``2i+1`` / ``2i+2`` and level ``l`` occupies the contiguous
+slice ``[2^l - 1, 2^{l+1} - 1)``.  Each descent step then touches exactly one
+contiguous region -- the property the FPGA design builds its level pipeline
+on, and the property our Pallas kernel's per-level VMEM blocks rely on.
+
+We work with *perfect* trees (n = 2^{H+1} - 1 nodes); arbitrary sorted inputs
+are padded with a +inf sentinel, matching the paper's complete-tree setting
+("the throughput will not change when the type of tree changes during a
+stream of infinite keys").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Sentinel key for padding to a perfect tree.  int32 max keeps compare
+# semantics intact for any real int32 key strictly below it.
+SENTINEL_KEY = np.int32(np.iinfo(np.int32).max)
+SENTINEL_VALUE = np.int32(-1)
+
+
+def level_offset(level: int) -> int:
+    """First BFS index of ``level`` (the start of its "BRAM partition")."""
+    return (1 << level) - 1
+
+
+def level_size(level: int) -> int:
+    return 1 << level
+
+
+def height_for(n_keys: int) -> int:
+    """Height H of the smallest perfect tree holding ``n_keys`` nodes."""
+    h = 0
+    while ((1 << (h + 1)) - 1) < n_keys:
+        h += 1
+    return h
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeData:
+    """A perfect BST in BFS layout.
+
+    keys/values: (n,) arrays, n = 2^{height+1} - 1, BFS order.
+    n_real: number of non-sentinel entries.
+    """
+
+    keys: jax.Array
+    values: jax.Array
+    height: int
+    n_real: int
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.keys.shape[0])
+
+    def level(self, l: int) -> Tuple[jax.Array, jax.Array]:
+        """The ``l``-th "BRAM partition": (keys, values) of one tree level."""
+        o, s = level_offset(l), level_size(l)
+        return self.keys[o : o + s], self.values[o : o + s]
+
+    def register_layer(self, levels: int) -> Tuple[jax.Array, jax.Array]:
+        """Top ``levels`` levels flattened -- the FPGA register layer."""
+        n = level_offset(levels)
+        return self.keys[:n], self.values[:n]
+
+    def subtree(self, split_level: int, index: int) -> "TreeData":
+        """Vertical partition: the ``index``-th subtree rooted at ``split_level``.
+
+        In BFS layout, subtree ``s`` owns, at global level ``l >= split_level``,
+        the offsets ``p`` with ``p >> (l - split_level) == s``; locally that is
+        level ``l' = l - split_level`` offset ``p' = p - s * 2^{l'}``.
+        """
+        sub_h = self.height - split_level
+        idx = subtree_gather_indices(self.height, split_level, index)
+        return TreeData(
+            keys=self.keys[idx],
+            values=self.values[idx],
+            height=sub_h,
+            n_real=int((np.asarray(self.keys[idx]) != SENTINEL_KEY).sum()),
+        )
+
+
+def subtree_gather_indices(height: int, split_level: int, index: int) -> np.ndarray:
+    """Global BFS indices of subtree ``index`` rooted at ``split_level``."""
+    out = []
+    for l_local in range(height - split_level + 1):
+        l = split_level + l_local
+        p = index * (1 << l_local) + np.arange(1 << l_local)
+        out.append(level_offset(l) + p)
+    return np.concatenate(out)
+
+
+def all_subtree_gather_indices(height: int, split_level: int) -> np.ndarray:
+    """(n_subtrees, subtree_nodes) gather map for every vertical partition."""
+    n_sub = 1 << split_level
+    return np.stack(
+        [subtree_gather_indices(height, split_level, s) for s in range(n_sub)]
+    )
+
+
+def eytzinger_from_sorted(
+    sorted_keys: np.ndarray, sorted_values: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray, int, int]:
+    """Lay out sorted key/value pairs as a perfect BFS tree (vectorized).
+
+    For a perfect tree of height H, the node at level ``l`` offset ``p`` has
+    in-order rank ``(2p + 1) * 2^{H-l} - 1``; inverting that map assigns each
+    sorted element its BFS slot without recursion.
+    """
+    sorted_keys = np.asarray(sorted_keys)
+    sorted_values = np.asarray(sorted_values)
+    if sorted_keys.ndim != 1 or sorted_keys.shape != sorted_values.shape:
+        raise ValueError("keys/values must be equal-length 1-D arrays")
+    if sorted_keys.size == 0:
+        raise ValueError("empty tree")
+    if not np.all(sorted_keys[:-1] < sorted_keys[1:]):
+        raise ValueError("keys must be strictly increasing")
+
+    n_real = sorted_keys.size
+    H = height_for(n_real)
+    n = (1 << (H + 1)) - 1
+
+    padded_keys = np.full(n, SENTINEL_KEY, dtype=np.int32)
+    padded_vals = np.full(n, SENTINEL_VALUE, dtype=np.int32)
+    padded_keys[:n_real] = sorted_keys.astype(np.int32)
+    padded_vals[:n_real] = sorted_values.astype(np.int32)
+    # Sentinel keys must stay the largest: they land in the right-most
+    # in-order ranks automatically because SENTINEL_KEY > every real key.
+
+    bfs_keys = np.empty(n, dtype=np.int32)
+    bfs_vals = np.empty(n, dtype=np.int32)
+    for l in range(H + 1):
+        p = np.arange(1 << l)
+        rank = (2 * p + 1) * (1 << (H - l)) - 1
+        o = level_offset(l)
+        bfs_keys[o : o + (1 << l)] = padded_keys[rank]
+        bfs_vals[o : o + (1 << l)] = padded_vals[rank]
+    return bfs_keys, bfs_vals, H, n_real
+
+
+def build_tree(keys: np.ndarray, values: np.ndarray) -> TreeData:
+    """Build a TreeData from (unsorted) unique keys + values."""
+    keys = np.asarray(keys, dtype=np.int32)
+    values = np.asarray(values, dtype=np.int32)
+    order = np.argsort(keys, kind="stable")
+    k, v, h, n_real = eytzinger_from_sorted(keys[order], values[order])
+    return TreeData(keys=jnp.asarray(k), values=jnp.asarray(v), height=h, n_real=n_real)
+
+
+def search_reference(tree: TreeData, queries: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Pure-jnp oracle: batched BST descent in BFS layout.
+
+    Returns (values, found).  Not-found queries get SENTINEL_VALUE.
+    """
+    n = tree.n_nodes
+
+    def step(carry, _):
+        idx, val, found = carry
+        node_key = tree.keys[idx]
+        node_val = tree.values[idx]
+        hit = (node_key == queries) & ~found
+        val = jnp.where(hit, node_val, val)
+        found = found | hit
+        go_right = queries > node_key
+        nxt = 2 * idx + 1 + go_right.astype(idx.dtype)
+        idx = jnp.where(found, idx, jnp.minimum(nxt, n - 1))
+        return (idx, val, found), None
+
+    B = queries.shape[0]
+    init = (
+        jnp.zeros((B,), dtype=jnp.int32),
+        jnp.full((B,), SENTINEL_VALUE, dtype=jnp.int32),
+        jnp.zeros((B,), dtype=bool),
+    )
+    (idx, val, found), _ = jax.lax.scan(step, init, None, length=tree.height + 1)
+    del idx
+    return val, found
+
+
+def register_layer_route(
+    tree: TreeData, queries: jax.Array, register_levels: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Descend the register layer only; route survivors to subtrees.
+
+    Returns (subtree_id, value, found):
+      * found=True  -> key matched inside the register layer, value valid.
+      * found=False -> subtree_id in [0, 2^register_levels) names the vertical
+        partition in which the descent must continue (paper Fig. 3).
+    """
+    if register_levels < 1:
+        raise ValueError("need at least one register level (the root)")
+
+    def step(carry, _):
+        idx, val, found = carry
+        node_key = tree.keys[idx]
+        node_val = tree.values[idx]
+        hit = (node_key == queries) & ~found
+        val = jnp.where(hit, node_val, val)
+        found = found | hit
+        go_right = queries > node_key
+        nxt = 2 * idx + 1 + go_right.astype(idx.dtype)
+        idx = jnp.where(found, idx, nxt)
+        return (idx, val, found), None
+
+    B = queries.shape[0]
+    init = (
+        jnp.zeros((B,), dtype=jnp.int32),
+        jnp.full((B,), SENTINEL_VALUE, dtype=jnp.int32),
+        jnp.zeros((B,), dtype=bool),
+    )
+    (idx, val, found), _ = jax.lax.scan(step, init, None, length=register_levels)
+    # After `register_levels` steps, a live key's idx is a BFS index at level
+    # `register_levels`; its offset there *is* the subtree id.
+    subtree_id = jnp.clip(idx - level_offset(register_levels), 0, None)
+    subtree_id = jnp.where(found, -1, subtree_id).astype(jnp.int32)
+    return subtree_id, val, found
+
+
+def subtree_search(
+    sub_keys: jax.Array,
+    sub_values: jax.Array,
+    sub_height: int,
+    queries: jax.Array,
+    active: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Descend one vertical partition (local BFS layout).
+
+    ``active`` masks padded/irrelevant slots so they cannot fake a hit.
+    """
+    n = sub_keys.shape[0]
+
+    def step(carry, _):
+        idx, val, found = carry
+        node_key = sub_keys[idx]
+        node_val = sub_values[idx]
+        hit = (node_key == queries) & ~found & active
+        val = jnp.where(hit, node_val, val)
+        found = found | hit
+        go_right = queries > node_key
+        nxt = 2 * idx + 1 + go_right.astype(idx.dtype)
+        idx = jnp.where(found, idx, jnp.minimum(nxt, n - 1))
+        return (idx, val, found), None
+
+    B = queries.shape[0]
+    init = (
+        jnp.zeros((B,), dtype=jnp.int32),
+        jnp.full((B,), SENTINEL_VALUE, dtype=jnp.int32),
+        jnp.zeros((B,), dtype=bool),
+    )
+    (_, val, found), _ = jax.lax.scan(step, init, None, length=sub_height + 1)
+    return val, found & active

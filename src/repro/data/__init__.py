@@ -1,0 +1,4 @@
+from repro.data.keysets import make_key_sets, make_tree_data
+from repro.data.pipeline import TokenPipeline
+
+__all__ = ["make_key_sets", "make_tree_data", "TokenPipeline"]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  bst_search       -- the paper's search pipeline (level-partitioned VMEM)
+  queue_dispatch   -- the paper's queue-mapped buffers (prefix-sum compaction)
+  flash_attention  -- LM substrate hot-spot (32k prefill cells)
+
+Each has a pure-jnp oracle in ref.py and a jitted wrapper in ops.py.
+Kernels are authored for TPU (BlockSpec VMEM tiling) and validated with
+``interpret=True`` on this CPU container.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

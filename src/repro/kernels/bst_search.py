@@ -1,0 +1,152 @@
+"""Pallas TPU kernel: pipelined BST descent over level-partitioned VMEM.
+
+FPGA -> TPU mapping (DESIGN.md §2):
+
+* one BRAM partition per tree level  ->  one pallas operand per level, each
+  staged into VMEM as a whole block (BlockSpec covers the full level, the
+  index_map is constant so the block is resident across grid steps);
+* the register layer (top ``register_levels`` levels)  ->  a single small
+  VMEM block that every query lane compares against simultaneously;
+* dual-port keys/cycle  ->  a whole query *chunk* (``block_q`` lanes) does a
+  compare-descend step per level, i.e. the level pipeline is unrolled across
+  the vector unit instead of across clock cycles;
+* the grid dimension streams query chunks exactly like the FPGA streams key
+  chunks -- while chunk ``i`` is being compared, the DMA engine prefetches
+  chunk ``i+1`` (Pallas double-buffers input blocks automatically).
+
+The descent's per-level gather (``level_keys[local_idx]``) is a 1-D dynamic
+gather within a VMEM-resident block -- the TPU analogue of a BRAM port read.
+Validated in interpret mode on CPU per the container's constraints.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SENTINEL_VALUE = -1  # plain int: jnp scalars would be captured as consts
+
+
+def _descend_one_level(
+    q, idx, val, found, active, level_keys, level_vals, level_offset_
+):
+    """One compare-descend step against a single level block."""
+    local = jnp.clip(idx - level_offset_, 0, level_keys.shape[0] - 1)
+    nk = level_keys[local]
+    nv = level_vals[local]
+    hit = (nk == q) & ~found & active
+    val = jnp.where(hit, nv, val)
+    found = found | hit
+    go_right = (q > nk).astype(idx.dtype)
+    idx = jnp.where(found | ~active, idx, 2 * idx + 1 + go_right)
+    return idx, val, found
+
+
+def _bst_search_kernel(
+    *refs,
+    register_levels: int,
+    height: int,
+):
+    """refs = [reg_k, reg_v, lvl_k[r..H], lvl_v[r..H] interleaved, q, active,
+    out_val, out_found]."""
+    n_deep = height + 1 - register_levels
+    reg_k_ref, reg_v_ref = refs[0], refs[1]
+    level_refs = refs[2 : 2 + 2 * n_deep]
+    q_ref = refs[2 + 2 * n_deep]
+    act_ref = refs[3 + 2 * n_deep]
+    val_ref = refs[4 + 2 * n_deep]
+    found_ref = refs[5 + 2 * n_deep]
+
+    q = q_ref[...]
+    active = act_ref[...] != 0
+    idx = jnp.zeros(q.shape, jnp.int32)
+    val = jnp.full(q.shape, SENTINEL_VALUE, dtype=jnp.int32)
+    found = jnp.zeros(q.shape, bool)
+
+    # --- register layer: levels [0, r) live in one broadcast block.
+    reg_k = reg_k_ref[...]
+    reg_v = reg_v_ref[...]
+    for _l in range(register_levels):
+        # global BFS index == offset inside the register block for idx < 2^r-1
+        idx, val, found = _descend_one_level(
+            q, idx, val, found, active, reg_k, reg_v, 0
+        )
+
+    # --- deep levels: one VMEM block ("BRAM partition") per level.
+    for j in range(n_deep):
+        l = register_levels + j
+        lk = level_refs[2 * j][...]
+        lv = level_refs[2 * j + 1][...]
+        idx, val, found = _descend_one_level(
+            q, idx, val, found, active, lk, lv, (1 << l) - 1
+        )
+
+    val_ref[...] = val
+    found_ref[...] = found.astype(jnp.int32)
+
+
+def bst_search_pallas(
+    tree_keys: jax.Array,
+    tree_values: jax.Array,
+    queries: jax.Array,
+    height: int,
+    active: Optional[jax.Array] = None,
+    register_levels: int = 3,
+    block_q: int = 512,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Search ``queries`` in a BFS-layout perfect tree of ``height``.
+
+    Returns (values, found).  The tree is split into a register block
+    (levels [0, register_levels)) plus one operand per deeper level.
+    """
+    B = queries.shape[0]
+    register_levels = min(register_levels, height + 1)
+    if active is None:
+        active = jnp.ones((B,), bool)
+    pad = (-B) % block_q
+    qp = jnp.pad(queries, (0, pad))
+    ap = jnp.pad(active.astype(jnp.int32), (0, pad))
+    nq = qp.shape[0] // block_q
+
+    reg_n = (1 << register_levels) - 1
+    inputs = [tree_keys[:reg_n], tree_values[:reg_n]]
+    in_specs = [
+        pl.BlockSpec((reg_n,), lambda i: (0,)),
+        pl.BlockSpec((reg_n,), lambda i: (0,)),
+    ]
+    for l in range(register_levels, height + 1):
+        o, s = (1 << l) - 1, 1 << l
+        inputs += [tree_keys[o : o + s], tree_values[o : o + s]]
+        in_specs += [
+            pl.BlockSpec((s,), lambda i: (0,)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+        ]
+    inputs += [qp, ap]
+    in_specs += [
+        pl.BlockSpec((block_q,), lambda i: (i,)),
+        pl.BlockSpec((block_q,), lambda i: (i,)),
+    ]
+
+    kernel = functools.partial(
+        _bst_search_kernel, register_levels=register_levels, height=height
+    )
+    out_val, out_found = pl.pallas_call(
+        kernel,
+        grid=(nq,),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((qp.shape[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*inputs)
+    return out_val[:B], out_found[:B] != 0

@@ -1,0 +1,152 @@
+"""Pallas TPU kernel: blockwise online-softmax attention (flash attention).
+
+This is the LM substrate's perf-critical compute layer: the 32k-prefill
+cells are impossible with materialized (Sq, Skv) scores (32 x 32768^2 fp32
+is ~137 GB per head), so prefill lowers through this kernel's blockwise
+schedule.  Supports causal masking, sliding windows (Mixtral/Hymba) and
+GQA via the kv index_map (no materialized head repetition).
+
+Grid = (batch*heads, q_blocks, kv_blocks); the kv dimension is innermost so
+the VMEM scratch accumulator carries across kv steps (canonical TPU flash
+pattern: init at kv==0, finalize at the last kv block).  MXU-aligned block
+shapes (multiples of 128) are chosen by the wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    block_q: int,
+    block_k: int,
+    seq_q: int,
+    seq_kv: int,
+    n_kv_blocks: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (block_q, d)
+    k = k_ref[0].astype(jnp.float32)  # (block_k, d)
+    v = v_ref[0].astype(jnp.float32)  # (block_k, d)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (block_q, block_k)
+
+    # absolute positions; decode-style calls align q at the end of kv
+    qpos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    ) + (seq_kv - seq_q)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1
+    )
+    mask = jnp.ones((block_q, block_k), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[:, 0]
+    l_prev = l_scr[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[:, 0] = m_new
+    l_scr[:, 0] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[:, 0]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        out = acc_scr[...] / safe_l[:, None]
+        out = jnp.where((l == 0.0)[:, None], 0.0, out)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,  # (BH, Sq, d)
+    k: jax.Array,  # (BHkv, Skv, d)
+    v: jax.Array,  # (BHkv, Skv, d)
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched-heads flash attention; GQA handled by the kv index_map."""
+    BH, Sq, d = q.shape
+    BHkv, Skv, _ = k.shape
+    if BH % BHkv:
+        raise ValueError("q heads must be a multiple of kv heads")
+    group = BH // BHkv
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    if Sq % block_q or Skv % block_k:
+        raise ValueError("sequence lengths must divide the block sizes")
+    nq, nk = Sq // block_q, Skv // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        seq_q=Sq,
+        seq_kv=Skv,
+        n_kv_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            # GQA: query head b reads kv head b // group -- no repetition.
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b // group, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),  # m (lane-replicated col 0)
+            pltpu.VMEM((block_q, 128), jnp.float32),  # l
+            pltpu.VMEM((block_q, d), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

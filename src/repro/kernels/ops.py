@@ -1,0 +1,110 @@
+"""Jitted public wrappers around the Pallas kernels (the ``ops.py`` contract).
+
+Every op takes ``interpret=`` (True on this CPU container; False compiles the
+Mosaic TPU kernel on real hardware) and falls back to the jnp oracle for
+shapes the kernels do not cover (degenerate sizes), so callers can use these
+unconditionally.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bst_search import bst_search_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.queue_dispatch import queue_dispatch_pallas
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("height", "register_levels", "block_q", "interpret", "use_ref"),
+)
+def bst_search(
+    tree_keys: jax.Array,
+    tree_values: jax.Array,
+    queries: jax.Array,
+    height: int,
+    active: Optional[jax.Array] = None,
+    register_levels: int = 3,
+    block_q: int = 512,
+    interpret: bool = True,
+    use_ref: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    if use_ref:
+        return ref.bst_search_ref(tree_keys, tree_values, queries, height, active)
+    return bst_search_pallas(
+        tree_keys,
+        tree_values,
+        queries,
+        height,
+        active=active,
+        register_levels=register_levels,
+        block_q=block_q,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_dest", "capacity", "interpret", "use_ref")
+)
+def queue_dispatch(
+    dest: jax.Array,
+    n_dest: int,
+    capacity: int,
+    interpret: bool = True,
+    use_ref: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    if use_ref:
+        return ref.queue_dispatch_ref(dest, n_dest, capacity)
+    return queue_dispatch_pallas(dest, n_dest, capacity, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal",
+        "window",
+        "scale",
+        "block_q",
+        "block_k",
+        "interpret",
+        "use_ref",
+    ),
+)
+def flash_attention(
+    q: jax.Array,  # (BH, Sq, d)
+    k: jax.Array,  # (BHkv, Skv, d)
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+    use_ref: bool = False,
+) -> jax.Array:
+    if use_ref:
+        group = q.shape[0] // k.shape[0]
+        kk = jnp.repeat(k, group, axis=0)
+        vv = jnp.repeat(v, group, axis=0)
+        return jax.vmap(
+            lambda qq, kx, vx: ref.mha_attention_ref(
+                qq, kx, vx, causal=causal, window=window, scale=scale
+            )
+        )(q, kk, vv)
+    return flash_attention_pallas(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        scale=scale,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+    )

@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function is the semantic ground truth the kernels are property-tested
+against (tests/test_kernels.py sweeps shapes & dtypes with assert_allclose).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+SENTINEL_VALUE = jnp.int32(-1)
+
+
+def bst_search_ref(
+    tree_keys: jax.Array,
+    tree_values: jax.Array,
+    queries: jax.Array,
+    height: int,
+    active: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Batched BFS-layout BST descent. Returns (values, found)."""
+    n = tree_keys.shape[0]
+    B = queries.shape[0]
+    if active is None:
+        active = jnp.ones((B,), dtype=bool)
+
+    def step(carry, _):
+        idx, val, found = carry
+        nk = tree_keys[idx]
+        nv = tree_values[idx]
+        hit = (nk == queries) & ~found & active
+        val = jnp.where(hit, nv, val)
+        found = found | hit
+        nxt = 2 * idx + 1 + (queries > nk).astype(idx.dtype)
+        idx = jnp.where(found, idx, jnp.minimum(nxt, n - 1))
+        return (idx, val, found), None
+
+    init = (
+        jnp.zeros((B,), jnp.int32),
+        jnp.full((B,), SENTINEL_VALUE, jnp.int32),
+        jnp.zeros((B,), bool),
+    )
+    (_, val, found), _ = jax.lax.scan(step, init, None, length=height + 1)
+    return val, found & active
+
+
+def queue_dispatch_ref(
+    dest: jax.Array, n_dest: int, capacity: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Queue-mapped buffers: (buffers (n_dest, capacity), counts, overflow).
+
+    buffers holds source indices (-1 = empty); FIFO order is preserved.
+    dest < 0 marks inactive items.
+    """
+    B = dest.shape[0]
+    onehot = jax.nn.one_hot(dest, n_dest, dtype=jnp.int32)
+    label = jnp.cumsum(onehot, axis=0) - onehot
+    label = jnp.take_along_axis(
+        label, jnp.clip(dest, 0, n_dest - 1)[:, None], axis=1
+    )[:, 0]
+    active = dest >= 0
+    kept = active & (label < capacity)
+    flat = jnp.full((n_dest * capacity + 1,), -1, jnp.int32)
+    lin = jnp.where(kept, dest * capacity + label, n_dest * capacity)
+    flat = flat.at[lin].set(jnp.arange(B, dtype=jnp.int32), mode="drop")
+    buffers = flat[:-1].reshape(n_dest, capacity)
+    counts = jnp.minimum(jnp.sum(onehot * active[:, None], axis=0), capacity)
+    return buffers, counts, active & ~kept
+
+
+def mha_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Reference attention.  q: (Sq, d), k/v: (Skv, d).  fp32 accumulation.
+
+    ``window`` masks keys older than ``window`` positions (sliding-window
+    attention); decode callers align q at the end of the kv sequence.
+    """
+    Sq, d = q.shape
+    Skv = k.shape[0]
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    logits = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    return (probs @ v.astype(jnp.float32)).astype(q.dtype)

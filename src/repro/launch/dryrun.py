@@ -1,0 +1,390 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: pjit must
+partition every step over the production meshes, the compiled module must
+report its per-device memory, and the HLO must contain a sane collective
+schedule.  Results (cost_analysis, memory_analysis, collective bytes parsed
+from the partitioned HLO) are written as JSON for EXPERIMENTS.md §Dry-run
+and the roofline analysis (benchmarks/roofline.py).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Any, Dict  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, canonical, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.models.config import (  # noqa: E402
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    cell_is_runnable,
+    input_specs,
+)
+
+RESULT_DIR = os.environ.get(
+    "DRYRUN_OUT",
+    os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun"),
+)
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)")
+_CALL_RE = re.compile(
+    r"(?:condition=%?([\w\.\-]+))|(?:body=%?([\w\.\-]+))|"
+    r"(?:calls=%?([\w\.\-]+))|(?:to_apply=%?([\w\.\-]+))"
+)
+
+
+def _split_computations(hlo_text: str):
+    """(computation name -> body lines, entry name).
+
+    A computation header is any column-0 line ending in '{' (params may
+    contain nested parens/tuples, so we key on the trailing brace only).
+    """
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        if line[:1] not in (" ", ""):
+            if line.rstrip().endswith("{") and not line.startswith("HloModule"):
+                m = _COMP_NAME_RE.match(line.strip())
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+                    if line.startswith("ENTRY"):
+                        entry = cur
+                    continue
+            if line.startswith("}"):
+                cur = None
+                continue
+        if cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps, entry
+
+
+def _trip_count(cond_lines: list) -> int:
+    """Heuristic: the loop bound is the max s32 constant in the while cond."""
+    best = 1
+    for ln in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Collective op bytes in the partitioned HLO, scaled by loop trip counts.
+
+    XLA's cost_analysis counts while-loop bodies ONCE (verified in this
+    container); collectives inside the layer/chunk scans would be similarly
+    under-counted from a flat text scan.  We therefore walk the call graph
+    from ENTRY, multiplying by each enclosing while-loop's trip count
+    (parsed from the loop condition's bound constant).
+    """
+    comps, entry = _split_computations(hlo_text)
+
+    # per-computation: own collectives and calls (with loop multiplier)
+    def line_op(s: str):
+        m = re.search(
+            r"=\s*((?:\([^)]*\))|(?:[a-z0-9\[\],{}\s]*?))\s*([a-z\-]+)\(", s
+        )
+        if not m:
+            return None
+        op = m.group(2)
+        for suffix in ("-start", "-done"):
+            if op.endswith(suffix):
+                op = op[: -len(suffix)]
+        return (op, m.group(1)) if op in _COLLECTIVES else None
+
+    out: Dict[str, Any] = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    seen_done = set()
+
+    def walk(name: str, mult: int, stack):
+        if name not in comps or name in stack:
+            return
+        stack = stack + (name,)
+        for ln in comps[name]:
+            s = ln.strip()
+            op = line_op(s)
+            if op is not None and "-done" not in s.split("(")[0]:
+                kind, shape_text = op
+                out[kind]["count"] += mult
+                out[kind]["bytes"] += _shape_bytes(shape_text) * mult
+            body = cond = None
+            called = []
+            for m in _CALL_RE.finditer(s):
+                c, b, call, apply_ = m.groups()
+                if c:
+                    cond = c
+                if b:
+                    body = b
+                if call:
+                    called.append(call)
+                if apply_:
+                    called.append(apply_)
+            if body is not None:
+                trips = _trip_count(comps.get(cond, [])) if cond else 1
+                walk(body, mult * trips, stack)
+                if cond:
+                    walk(cond, mult * trips, stack)
+            for c in called:
+                walk(c, mult, stack)
+
+    if entry is not None:
+        walk(entry, 1, ())
+    else:  # fallback: flat scan of every computation
+        for name in list(comps):
+            walk(name, 1, ())
+    out["total_bytes"] = sum(v["bytes"] for v in out.values() if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for v in out.values() if isinstance(v, dict))
+    return out
+
+
+def _mem_analysis(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    out = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        if hasattr(ma, attr):
+            out[attr] = int(getattr(ma, attr))
+    out["peak_per_device_bytes"] = (
+        out.get("argument_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0)
+        - out.get("alias_size_in_bytes", 0)
+    )
+    return out
+
+
+def _cost_analysis(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))}
+
+
+def build_lowered(cfg: ModelConfig, shape: ShapeConfig, mesh, variant=None):
+    """Lower the step function for one cell with production shardings.
+
+    ``variant`` (perf iterations): dict of ModelConfig field overrides, plus
+    the special key ``seq_shard_cache`` for sequence-parallel decode caches.
+    """
+    import dataclasses as _dc
+
+    from repro.sharding import specs as S
+    from repro.training.train_loop import TrainConfig, TrainState, make_train_step
+    from repro.optim.optimizer import AdamWState
+
+    variant = dict(variant or {})
+    seq_shard = variant.pop("seq_shard_cache", None)  # None = auto rule
+    microbatches = variant.pop("microbatches", 1)
+    if variant:
+        cfg = _dc.replace(cfg, **variant)
+
+    ins = input_specs(cfg, shape)
+    B = shape.global_batch
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(microbatches=microbatches)
+        step = make_train_step(cfg, tcfg, mesh=mesh, mode="pjit", donate=True)
+        # abstract state: ShapeDtypeStructs in the exact pytree layout
+        params = jax.eval_shape(lambda: M.init_params(cfg, jax.random.key(0)))
+        f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        state = TrainState(
+            params=params,
+            opt=AdamWState(
+                step=jax.ShapeDtypeStruct((), jnp.int32),
+                master=jax.tree.map(f32, params),
+                mu=jax.tree.map(f32, params),
+                nu=jax.tree.map(f32, params),
+            ),
+            error_feedback=(),
+        )
+        args = (state, ins["tokens"], ins["labels"])
+        if cfg.frontend is not None:
+            args = args + (ins["frontend_embeds"],)
+        return step.lower(*args)
+
+    params = jax.eval_shape(lambda: M.init_params(cfg, jax.random.key(0)))
+    if shape.kind == "prefill":
+        from repro.serving.serve_loop import make_prefill_fn
+
+        fn = make_prefill_fn(cfg, mesh=mesh, batch=B, max_len=shape.seq_len)
+        args = (params, ins["tokens"])
+        if cfg.frontend is not None:
+            args = args + (ins["frontend_embeds"],)
+        return fn.lower(*args)
+
+    # decode
+    from repro.serving.serve_loop import make_serve_step
+
+    cache = M.make_decode_state(cfg, B, shape.seq_len, as_specs=True)
+    step = make_serve_step(cfg, mesh=mesh, batch=B, seq_shard=seq_shard)
+    return step.lower(params, ins["tokens"], cache)
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str,
+    save: bool = True,
+    variant=None,
+    tag: str = "",
+):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    runnable, reason = cell_is_runnable(cfg, shape)
+    rec: Dict[str, Any] = {
+        "arch": cfg.name,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "kind": shape.kind,
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+    }
+    if variant:
+        rec["variant"] = {k: str(v) for k, v in variant.items()}
+        rec["tag"] = tag
+    if not runnable:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = reason
+        return _finish(rec, save, tag)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        with mesh:
+            lowered = build_lowered(cfg, shape, mesh, variant=variant)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            rec["lower_s"] = round(t1 - t0, 2)
+            rec["compile_s"] = round(t2 - t1, 2)
+            rec["memory_analysis"] = _mem_analysis(compiled)
+            rec["cost_analysis"] = _cost_analysis(compiled)
+            hlo = compiled.as_text()
+            rec["collectives"] = collective_bytes(hlo)
+            rec["hlo_bytes"] = len(hlo)
+            rec["status"] = "ok"
+            print(compiled.memory_analysis())
+            ca = rec["cost_analysis"]
+            print(
+                f"[{cfg.name} x {shape_name} x {mesh_kind}] "
+                f"flops={ca.get('flops', 0):.3e} "
+                f"bytes={ca.get('bytes accessed', 0):.3e} "
+                f"collective_bytes={rec['collectives']['total_bytes']:.3e} "
+                f"compile={rec['compile_s']}s"
+            )
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[{cfg.name} x {shape_name} x {mesh_kind}] FAILED: {rec['error']}")
+    return _finish(rec, save, tag)
+
+
+def _finish(rec, save, tag: str = ""):
+    if save:
+        os.makedirs(RESULT_DIR, exist_ok=True)
+        slug = f"{canonical(rec['arch'])}_{rec['shape']}_{rec['mesh']}"
+        if tag:
+            slug += f"__{tag}"
+        with open(os.path.join(RESULT_DIR, slug + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id (see configs/)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose result JSON already says ok/skipped")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = ARCH_IDS if (args.all or args.arch is None) else [canonical(args.arch)]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+
+    failures = 0
+    for mk in meshes:
+        for a in archs:
+            for s in shapes:
+                if args.skip_existing:
+                    p = os.path.join(RESULT_DIR, f"{canonical(a)}_{s}_{mk}.json")
+                    if os.path.exists(p):
+                        try:
+                            if json.load(open(p)).get("status") in ("ok", "skipped"):
+                                continue
+                        except Exception:
+                            pass
+                rec = run_cell(a, s, mk)
+                failures += rec["status"] == "error"
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Axis roles (DESIGN.md §5): pod/data = data parallelism (and BST tree
+duplication), model = tensor/expert/vertical-subtree parallelism.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state -- the dry-run must set XLA_FLAGS before any jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh(
+        (n // model, model),
+        ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto),
+    )

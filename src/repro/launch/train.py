@@ -1,0 +1,110 @@
+"""Training driver: fault-tolerant loop around make_train_step.
+
+Single-host today, but structured the way a 1000-node job needs:
+  * pure-function step over explicit TrainState;
+  * checkpoint manager with atomic step-tagged saves + retention + async;
+  * stateless-resumable data pipeline (batch = f(seed, step));
+  * straggler/failure policy: per-step deadline -> abort-and-restart from
+    the last checkpoint (on a pod this is where slice re-election and
+    jax.distributed re-init would hook in; the state mechanics already
+    support restoring onto a smaller mesh via checkpoint/elastic.py);
+  * optional gradient compression (see training/train_loop.py).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --steps 100 --smoke --ckpt-dir /tmp/ckpt [--resume]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import canonical, get_config, smoke_config
+from repro.data.pipeline import TokenPipeline
+from repro.training.train_loop import (
+    TrainConfig,
+    init_train_state,
+    make_train_step,
+)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compression", default=None, choices=[None, "bf16", "int8"])
+    ap.add_argument("--step-deadline-s", type=float, default=None,
+                    help="straggler mitigation: abort if a step exceeds this")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tcfg = TrainConfig(
+        peak_lr=args.lr,
+        warmup_steps=max(10, args.steps // 20),
+        total_steps=args.steps,
+        microbatches=args.microbatches,
+        compression=args.compression,
+    )
+    pipe = TokenPipeline(cfg.vocab_size, args.seq, args.batch)
+    step_fn = make_train_step(cfg, tcfg)
+
+    mgr = (
+        CheckpointManager(args.ckpt_dir, keep=3, save_async=True)
+        if args.ckpt_dir
+        else None
+    )
+    state = init_train_state(cfg, tcfg, jax.random.key(0))
+    step0 = 0
+    if mgr is not None and args.resume:
+        try:
+            state, step0, extra = mgr.restore(state)
+            step0 += 1
+            print(f"resumed from step {step0 - 1}")
+        except FileNotFoundError:
+            pass
+
+    t_start = time.time()
+    for s in range(step0, args.steps):
+        t0 = time.time()
+        tokens, labels = pipe.batch_at(s)
+        state, metrics = step_fn(state, jnp.asarray(tokens), jnp.asarray(labels))
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = time.time() - t0
+        if args.step_deadline_s and dt > args.step_deadline_s and s > step0:
+            # Straggler policy: a healthy fleet restarts this worker from the
+            # last checkpoint rather than dragging the collective.
+            print(f"step {s} exceeded deadline ({dt:.1f}s) -- aborting for restart")
+            raise SystemExit(42)
+        if mgr is not None and (s + 1) % args.ckpt_every == 0:
+            mgr.save(s, state, extra={"pipeline_step": s})
+        if s % 10 == 0 or s == args.steps - 1:
+            tput = args.batch * args.seq / dt
+            print(
+                f"step {s:5d} loss={metrics['loss']:.4f} "
+                f"gnorm={metrics['grad_norm']:.3f} lr={metrics['lr']:.2e} "
+                f"{dt*1e3:.0f}ms {tput:.0f} tok/s"
+            )
+    if mgr is not None:
+        mgr.save(args.steps - 1, state, extra={"pipeline_step": args.steps - 1})
+        mgr.wait()
+    print(f"done in {time.time() - t_start:.1f}s")
+    return state
+
+
+if __name__ == "__main__":
+    main()

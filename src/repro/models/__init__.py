@@ -1,0 +1,3 @@
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES, cell_is_runnable, input_specs
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "cell_is_runnable", "input_specs"]

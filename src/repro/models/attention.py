@@ -1,0 +1,296 @@
+"""GQA attention: training/prefill (blockwise or Pallas flash) and decode.
+
+Three implementations behind one interface (cfg.attention_impl):
+  * "blockwise"    -- pure-jnp online-softmax scan over kv blocks.  Same
+                      schedule as the flash kernel, expressed at the XLA
+                      level; this is what the 32k dry-run cells lower (clean
+                      HLO, bounded memory) and the CPU-executable path.
+  * "flash_pallas" -- the Pallas kernel (kernels/flash_attention.py); the
+                      production TPU path, validated in interpret mode.
+  * "naive"        -- materialized scores, for tiny tests only.
+
+Decode attends one new token against a KV cache; sliding-window archs use a
+ring-buffer cache of length ``window`` so the 524k-context cell costs
+O(window) per step (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, C, KV, hd)  C = max context (or window for SWA)
+    v: jax.Array  # (B, C, KV, hd)
+    length: jax.Array  # () int32 -- tokens written so far (absolute)
+
+
+def attn_params_shape(cfg: ModelConfig, cross: bool = False):
+    D, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    shapes = {
+        "wq": (D, H * hd),
+        "wk": (D, KV * hd),
+        "wv": (D, KV * hd),
+        "wo": (H * hd, D),
+    }
+    if cfg.qk_norm and not cross:
+        shapes["q_norm"] = (hd,)
+        shapes["k_norm"] = (hd,)
+    return shapes
+
+
+def _split_heads(x, n, hd):
+    B, S, _ = x.shape
+    return x.reshape(B, S, n, hd)
+
+
+def _blockwise_attn(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, KV, hd)
+    v: jax.Array,
+    causal: bool,
+    window: Optional[int],
+    block_k: int,
+    scale: float,
+    block_q: int = 512,
+) -> jax.Array:
+    """Flash-structured attention at the XLA level.
+
+    Outer scan over INDEPENDENT q blocks (rematerialized: backward saves only
+    the per-block outputs, i.e. the attention output itself), inner online-
+    softmax scan over kv blocks.  The earlier kv-outer formulation saved an
+    (B, Sq, KV, G, hd) fp32 accumulator per kv step for the backward pass --
+    nblk x the activation size, the dominant term of the hymba/mamba train
+    baselines (§Perf iter 3).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    offset = Skv - Sq  # q positions sit at the end of the kv sequence
+
+    nk = -(-Skv // block_k)
+    pad_k = nk * block_k - Skv
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    kb = kp.reshape(B, nk, block_k, KV, hd).swapaxes(0, 1)
+    vb = vp.reshape(B, nk, block_k, KV, hd).swapaxes(0, 1)
+
+    block_q = min(block_q, Sq)
+    nq = -(-Sq // block_q)
+    pad_q = nq * block_q - Sq
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, group, hd)
+    qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    qb = qf.reshape(B, nq, block_q, KV, group, hd).swapaxes(0, 1)
+
+    def one_q_block(qi, qblk):
+        # qblk: (B, bq, KV, G, hd)
+        qpos = qi * block_q + jnp.arange(block_q) + offset
+
+        def body(carry, inp):
+            m, l, acc = carry  # (B,bq,KV,G), (B,bq,KV,G), (B,bq,KV,G,hd)
+            kc, vc, blk = inp
+            kpos = blk * block_k + jnp.arange(block_k)
+            s = jnp.einsum("bqkgd,bpkd->bqkgp", qblk, kc.astype(jnp.float32))
+            msk = jnp.broadcast_to(
+                (kpos < Skv)[None, None, None, None, :], s.shape
+            )
+            live = (qpos < Sq + offset)
+            msk = msk & live[None, :, None, None, None]
+            if causal:
+                cm = kpos[None, :] <= qpos[:, None]
+                msk = msk & cm[None, :, None, None, :]
+            if window is not None:
+                wm = kpos[None, :] > qpos[:, None] - window
+                msk = msk & wm[None, :, None, None, :]
+            s = jnp.where(msk, s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(msk, p, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bqkgp,bpkd->bqkgd", p, vc.astype(jnp.float32))
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, block_q, KV, group), -1e30, jnp.float32),
+            jnp.zeros((B, block_q, KV, group), jnp.float32),
+            jnp.zeros((B, block_q, KV, group, hd), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            body, init, (kb, vb, jnp.arange(nk, dtype=jnp.int32))
+        )
+        safe_l = jnp.where(l == 0, 1.0, l)
+        out = acc / safe_l[..., None]
+        return jnp.where((l == 0)[..., None], 0.0, out)
+
+    ys = jax.lax.map(
+        jax.checkpoint(lambda inp: one_q_block(inp[0], inp[1])),
+        (jnp.arange(nq, dtype=jnp.int32), qb),
+    )  # (nq, B, bq, KV, G, hd)
+    out = ys.swapaxes(0, 1).reshape(B, nq * block_q, KV, group, hd)[:, :Sq]
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _naive_attn(q, k, v, causal, window, scale):
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, group, hd)
+    s = jnp.einsum("bqkgd,bpkd->bqkgp", qg, k.astype(jnp.float32))
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+    kpos = jnp.arange(Skv)[None, :]
+    msk = jnp.ones((Sq, Skv), bool)
+    if causal:
+        msk &= kpos <= qpos
+    if window is not None:
+        msk &= kpos > qpos - window
+    s = jnp.where(msk[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgp,bpkd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _flash_pallas_attn(q, k, v, causal, window, scale, cfg: ModelConfig):
+    from repro.kernels import ops as kops
+
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    qf = q.swapaxes(1, 2).reshape(B * H, Sq, hd)
+    kf = k.swapaxes(1, 2).reshape(B * KV, k.shape[1], hd)
+    vf = v.swapaxes(1, 2).reshape(B * KV, v.shape[1], hd)
+    out = kops.flash_attention(
+        qf,
+        kf,
+        vf,
+        causal=causal,
+        window=window,
+        scale=scale,
+        block_q=min(cfg.attn_block_q, Sq),
+        block_k=min(cfg.attn_block_k, k.shape[1]),
+        interpret=True,
+    )
+    return out.reshape(B, H, Sq, hd).swapaxes(1, 2)
+
+
+def multi_head_attention(
+    cfg: ModelConfig,
+    params,
+    x: jax.Array,  # (B, S, D)
+    positions: jax.Array,  # (B, S) absolute positions
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,  # cross-attn
+) -> jax.Array:
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    q = _split_heads(x @ params["wq"], H, hd)
+    if kv_override is None:
+        k = _split_heads(x @ params["wk"], KV, hd)
+        v = _split_heads(x @ params["wv"], KV, hd)
+        cos, sin = layers.rope_angles(positions, hd, cfg.rope_theta)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+        if cfg.qk_norm:
+            q = layers.rms_norm(q, params["q_norm"], cfg.norm_eps)
+            k = layers.rms_norm(k, params["k_norm"], cfg.norm_eps)
+        q = layers.apply_rope(q, cos, sin)
+        k = layers.apply_rope(k, cos, sin)
+    else:
+        mem_k, mem_v = kv_override  # already projected (B, Smem, KV, hd)
+        k, v = mem_k, mem_v
+    scale = hd**-0.5
+    if cfg.attention_impl == "naive":
+        out = _naive_attn(q, k, v, causal, window, scale)
+    elif cfg.attention_impl == "flash_pallas":
+        out = _flash_pallas_attn(q, k, v, causal, window, scale, cfg)
+    else:
+        out = _blockwise_attn(
+            q, k, v, causal, window, min(cfg.attn_block_k, k.shape[1]), scale
+        )
+    return out.reshape(x.shape[0], x.shape[1], H * hd) @ params["wo"]
+
+
+def project_cross_kv(cfg: ModelConfig, params, memory: jax.Array):
+    """Precompute cross-attention K/V from encoder memory (no rope)."""
+    hd = cfg.resolved_head_dim
+    k = _split_heads(memory @ params["wk"], cfg.n_kv_heads, hd)
+    v = _split_heads(memory @ params["wv"], cfg.n_kv_heads, hd)
+    return k, v
+
+
+# --------------------------------------------------------------------- decode
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int) -> KVCache:
+    """Ring buffer of ``window`` slots for SWA archs, else full ``max_len``."""
+    C = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    hd = cfg.resolved_head_dim
+    shape = (batch, C, cfg.n_kv_heads, hd)
+    return KVCache(
+        k=jnp.zeros(shape, cfg.param_dtype),
+        v=jnp.zeros(shape, cfg.param_dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def decode_attention(
+    cfg: ModelConfig,
+    params,
+    x: jax.Array,  # (B, 1, D)
+    cache: KVCache,
+    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, KVCache]:
+    """One decode step: write new KV into the (ring) cache, attend, advance."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    group = H // KV
+    pos = cache.length  # absolute position of the new token
+
+    q = _split_heads(x @ params["wq"], H, hd)
+    if kv_override is None:
+        k_new = _split_heads(x @ params["wk"], KV, hd)
+        v_new = _split_heads(x @ params["wv"], KV, hd)
+        cos, sin = layers.rope_angles(pos[None, None], hd, cfg.rope_theta)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+        if cfg.qk_norm:
+            q = layers.rms_norm(q, params["q_norm"], cfg.norm_eps)
+            k_new = layers.rms_norm(k_new, params["k_norm"], cfg.norm_eps)
+        q = layers.apply_rope(q, cos, sin)
+        k_new = layers.apply_rope(k_new, cos, sin)
+        C = cache.k.shape[1]
+        slot = pos % C  # ring for SWA, linear when C == max_len
+        ck = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+        new_cache = KVCache(ck, cv, pos + 1)
+        k_all, v_all = ck, cv
+        # slot i holds absolute position: ring unwrap
+        slots = jnp.arange(C)
+        wrapped = pos + 1 > C
+        abs_pos = jnp.where(
+            wrapped,
+            jnp.where(slots <= slot, pos - slot + slots, pos - slot - C + slots),
+            slots,
+        )
+        valid = abs_pos <= pos
+        if cfg.sliding_window:
+            valid &= abs_pos > pos - cfg.sliding_window
+    else:
+        k_all, v_all = kv_override
+        new_cache = cache
+        valid = jnp.ones((k_all.shape[1],), bool)
+
+    qg = (q.astype(jnp.float32) * hd**-0.5).reshape(B, 1, KV, group, hd)
+    s = jnp.einsum("bqkgd,bpkd->bqkgp", qg, k_all.astype(jnp.float32))
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgp,bpkd->bqkgd", p, v_all.astype(jnp.float32))
+    out = out.reshape(B, 1, H * hd).astype(x.dtype)
+    return out @ params["wo"], new_cache

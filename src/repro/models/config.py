@@ -1,0 +1,213 @@
+"""Model configuration: one frozen dataclass drives all ten architectures.
+
+Families:
+  dense   -- GQA decoder LM (internlm2, granite-3, tinyllama, qwen3)
+  moe     -- dense + mixture-of-experts FFN (mixtral); expert dispatch uses
+             the paper's direct/queue buffer mapping (models/moe.py)
+  ssm     -- attention-free mamba2 (SSD)
+  hybrid  -- hymba: parallel attention + SSM heads per layer
+  encdec  -- seamless-m4t: encoder + causal decoder with cross-attention
+  vlm     -- internvl2: decoder LM consuming stub patch embeddings
+
+Modality frontends ([audio]/[vlm]) are STUBS per the assignment:
+``input_specs`` hands the model precomputed frame/patch embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    rope_theta: float = 1e6
+    # --- MoE (paper-technique integration point)
+    n_experts: int = 0
+    top_k: int = 0
+    moe_dispatch: str = "queue"  # "queue" (paper's best) | "direct"
+    capacity_factor: float = 1.25
+    # Dispatch groups along the batch dim.  None = one global group (the
+    # naive baseline: a global prefix-sum that GSPMD cannot shard -- kept
+    # selectable for the §Perf before/after).  With groups aligned to the
+    # DP shards, dispatch is device-local (GShard-style capacity groups).
+    moe_groups: int | None = None
+    # --- attention extras
+    sliding_window: Optional[int] = None
+    # --- SSM (mamba2 SSD / hymba heads)
+    ssm_state: int = 0
+    ssm_expand: int = 1
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    # --- encoder-decoder
+    encoder_layers: int = 0
+    # --- modality frontend stub
+    frontend: Optional[str] = None  # "audio" | "vision"
+    frontend_len: int = 0  # frames/patches prepended
+    # --- numerics / implementation switches
+    dtype: str = "bfloat16"
+    # "tp": params sharded over the model axis (baseline).  "dp_only":
+    # params replicated, batch sharded over EVERY mesh axis -- zero
+    # activation collectives; right call when params fit per chip and
+    # global_batch >= chips (§Perf iter 4).
+    sharding_strategy: str = "tp"
+    # ZeRO-1: shard optimizer master/mu/nu over the data axis along each
+    # leaf's leading dim (stacked layers: L % data == 0) -- grads arrive
+    # reduce-scattered instead of all-reduced, opt memory /data (§Perf iter 5)
+    zero1: bool = False
+    attention_impl: str = "blockwise"  # blockwise | flash_pallas | naive
+    attn_block_q: int = 512
+    attn_block_k: int = 1024
+    remat: bool = True
+    remat_policy: str = "none"  # "none" (save scan carries only) | "dots"
+    scan_layers: bool = True  # False: unroll (exact HLO costs, slower compile)
+    logit_chunk: int = 512  # sequence-chunked cross-entropy
+
+    # ------------------------------------------------------------------ props
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def has_attention(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def supports_long_decode(self) -> bool:
+        """Sub-quadratic decode: SSM state and/or sliding-window KV."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.sliding_window is not None
+
+    @property
+    def param_dtype(self) -> jnp.dtype:
+        return jnp.dtype(self.dtype)
+
+    def n_params(self) -> int:
+        """Total parameter count (for 6·N·D roofline bookkeeping)."""
+        D, F, V = self.d_model, self.d_ff, self.vocab_size
+        hd = self.resolved_head_dim
+        H, KV = self.n_heads, self.n_kv_heads
+        per_layer = 0
+        if self.has_attention:
+            per_layer += D * H * hd + 2 * D * KV * hd + H * hd * D  # q k v o
+            per_layer += 2 * D  # norms
+            if self.qk_norm:
+                per_layer += 2 * hd
+        if self.family == "moe":
+            per_layer += D * self.n_experts  # router
+            per_layer += self.n_experts * 3 * D * F
+        elif F > 0:
+            per_layer += 3 * D * F  # swiglu
+        if self.family in ("ssm", "hybrid"):
+            di, N, Hs = self.d_inner, self.ssm_state, self.ssm_heads
+            per_layer += 2 * D * di + 2 * D * N + D * Hs + di * D  # x z B C dt o
+            per_layer += 3 * Hs + di  # A, D, dt_bias, gated-norm scale
+            per_layer += 4 * (di + 2 * N)  # depthwise conv (width 4)
+            if self.family == "ssm":
+                per_layer += D  # ln1 (attention branch adds norms otherwise)
+        n = self.n_layers * per_layer
+        if self.family == "encdec":
+            n += self.encoder_layers * (
+                D * H * hd + 2 * D * KV * hd + H * hd * D + 3 * D * F + 2 * D
+            )
+            # decoder cross-attention
+            n += self.n_layers * (D * H * hd + 2 * D * KV * hd + H * hd * D + D)
+        n += V * D  # embedding
+        if not self.tie_embeddings:
+            n += V * D  # output head
+        n += D  # final norm
+        return n
+
+    def n_active_params(self) -> int:
+        """Active-per-token params (MoE: top_k of n_experts)."""
+        if self.family != "moe":
+            return self.n_params()
+        D, F = self.d_model, self.d_ff
+        inactive = self.n_layers * (self.n_experts - self.top_k) * 3 * D * F
+        return self.n_params() - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(runnable, reason).  long_500k needs sub-quadratic decode."""
+    if shape.name == "long_500k" and not cfg.supports_long_decode:
+        return False, (
+            "pure full-attention arch: 524k dense-KV decode is the quadratic "
+            "case long_500k excludes (DESIGN.md §4)"
+        )
+    return True, ""
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeConfig, for_smoke: bool = False
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    train:   tokens/labels (B, S)
+    prefill: tokens (B, S)
+    decode:  tokens (B, 1) + the KV/SSM cache pytree is created separately by
+             serving.make_cache_specs (it depends on arch internals).
+    Frontends contribute precomputed embeddings (stub).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = cfg.param_dtype
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    else:  # decode: one new token against a seq_len-deep cache
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+    if cfg.frontend is not None and shape.kind != "decode":
+        # encdec (audio): encoder consumes a frame per position -> length S.
+        # vlm (vision): a fixed budget of patch embeddings overrides the
+        # first ``frontend_len`` decoder positions (total length stays S).
+        flen = S if cfg.family == "encdec" else cfg.frontend_len
+        specs["frontend_embeds"] = jax.ShapeDtypeStruct((B, flen, cfg.d_model), dt)
+    # encdec decode: encoder memory + cross-KV live in the cache pytree
+    # (serving.make_cache_specs), not here.
+    return specs

@@ -1,0 +1,93 @@
+"""Shared layer library: norms, rope, SwiGLU MLP, embeddings, chunked CE.
+
+Conventions:
+  * activations (B, S, D); weights stored in cfg.param_dtype (bf16 on the
+    production path), math that needs it (softmax, norms, CE) in fp32;
+  * all parameters are plain dict pytrees so they stack cleanly for
+    lax.scan-over-layers and shard with simple PartitionSpec trees.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope_angles(
+    positions: jax.Array, head_dim: int, theta: float
+) -> Tuple[jax.Array, jax.Array]:
+    """(cos, sin) of shape (..., head_dim // 2), fp32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, hd); cos/sin: (..., S, 1, hd/2) or broadcastable."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array):
+    g = jnp.einsum("bsd,df->bsf", x, w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, w_down)
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return table[tokens]
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    """x (B,S,D) @ (V,D)^T -> (B,S,V)."""
+    return jnp.einsum("bsd,vd->bsv", x, table)
+
+
+def chunked_softmax_xent(
+    x: jax.Array,  # (B, S, D) final hidden states
+    head: jax.Array,  # (V, D) output embedding
+    labels: jax.Array,  # (B, S) int32
+    chunk: int,
+    mask: Optional[jax.Array] = None,  # (B, S) bool
+) -> jax.Array:
+    """Mean next-token CE with sequence-chunked logits.
+
+    Never materializes (B, S, V): peak live logits are (B, chunk, V), which is
+    what makes the 150k/256k-vocab architectures trainable at seq 4096.
+    """
+    B, S, D = x.shape
+    if S % chunk:
+        chunk = S  # degenerate/smoke shapes
+    n_chunks = S // chunk
+    xs = x.reshape(B, n_chunks, chunk, D).swapaxes(0, 1)  # (n, B, c, D)
+    ls = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    ms = (
+        mask.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+        if mask is not None
+        else jnp.ones((n_chunks, B, chunk), bool)
+    )
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xc, lc, mc = inp
+        logits = jnp.einsum("bcd,vd->bcv", xc, head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc.astype(jnp.float32)
+        return (tot + nll.sum(), cnt + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros((), jnp.int32)), (xs, ls, ms))
+    return tot / jnp.maximum(cnt, 1).astype(jnp.float32)

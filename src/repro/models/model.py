@@ -1,0 +1,374 @@
+"""Unified model: init / train forward / prefill / decode for all families.
+
+Structure decisions that matter at scale:
+  * scan-over-layers with stacked (L, ...) params -- one layer's HLO compiled
+    once and reused, keeping the 56-layer dry-run cells compilable;
+  * optional jax.checkpoint (remat) around the scanned layer body;
+  * caches are stacked (L, ...) pytrees threaded through the same scan;
+  * losses never materialize (B, S, V) logits (layers.chunked_softmax_xent).
+
+Families: dense / moe / ssm / hybrid / encdec / vlm (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers, moe, ssm
+from repro.models.config import ModelConfig
+
+
+# ------------------------------------------------------------------ param init
+def _init_dense(key, shape, dtype, scale=0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _layer_param_shapes(cfg: ModelConfig, role: str = "decoder") -> Dict[str, Any]:
+    D = cfg.d_model
+    shapes: Dict[str, Any] = {"ln1": (D,)}
+    if cfg.family == "ssm":
+        shapes["ssm"] = ssm.ssm_params_shape(cfg)
+        return shapes
+    causal_attn = attn.attn_params_shape(cfg)
+    shapes["attn"] = causal_attn
+    if cfg.family == "hybrid":
+        shapes["ssm"] = ssm.ssm_params_shape(cfg)
+    if role == "decoder" and cfg.family == "encdec":
+        shapes["ln_cross"] = (D,)
+        shapes["cross"] = attn.attn_params_shape(cfg, cross=True)
+    shapes["ln2"] = (D,)
+    if cfg.family == "moe":
+        shapes["moe"] = moe.moe_params_shape(cfg)
+    elif cfg.d_ff > 0:
+        shapes["mlp"] = {
+            "w_gate": (D, cfg.d_ff),
+            "w_up": (D, cfg.d_ff),
+            "w_down": (cfg.d_ff, D),
+        }
+    return shapes
+
+
+def _init_tree(key, shapes, dtype):
+    leaves, treedef = jax.tree.flatten(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_dense(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    dt = cfg.param_dtype
+    k_embed, k_head, k_layers, k_enc, k_norm = jax.random.split(key, 5)
+    params: Dict[str, Any] = {
+        "embed": _init_dense(k_embed, (cfg.vocab_size, cfg.d_model), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = _init_dense(k_head, (cfg.vocab_size, cfg.d_model), dt)
+
+    lshapes = _layer_param_shapes(cfg, role="decoder")
+    lkeys = jax.random.split(k_layers, cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: _init_tree(k, lshapes, dt))(lkeys)
+    if cfg.family == "encdec":
+        eshapes = _layer_param_shapes(cfg, role="encoder")
+        ekeys = jax.random.split(k_enc, cfg.encoder_layers)
+        params["enc_layers"] = jax.vmap(lambda k: _init_tree(k, eshapes, dt))(ekeys)
+        params["enc_final_norm"] = jnp.ones((cfg.d_model,), dt)
+    return params
+
+
+# ---------------------------------------------------------------- layer bodies
+def _mix_ffn(cfg: ModelConfig, lp, h):
+    if cfg.family == "moe":
+        out, dropped = moe.moe_ffn(cfg, lp["moe"], h)
+        return out, dropped
+    if "mlp" in lp:
+        return layers.swiglu(h, lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"]), 0.0
+    return jnp.zeros_like(h), 0.0
+
+
+def _decoder_layer_full(cfg: ModelConfig, lp, x, positions, memory_kv, causal):
+    """Full-sequence layer (train/prefill/encoder). Returns (x, aux)."""
+    aux = 0.0
+    h = layers.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.family == "ssm":
+        mixed, _ = ssm.ssd_parallel(cfg, lp["ssm"], h)
+        return x + mixed, aux
+    a = attn.multi_head_attention(
+        cfg, lp["attn"], h, positions, causal=causal, window=cfg.sliding_window
+    )
+    if cfg.family == "hybrid":
+        s, _ = ssm.ssd_parallel(cfg, lp["ssm"], h)
+        a = (a + s) * 0.5  # parallel attention + SSM heads (hymba)
+    x = x + a
+    if "cross" in lp and memory_kv is not None:
+        h = layers.rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+        c = attn.multi_head_attention(
+            cfg, lp["cross"], h, positions, causal=False, window=None,
+            kv_override=memory_kv,
+        )
+        x = x + c
+    h = layers.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    f, dropped = _mix_ffn(cfg, lp, h)
+    return x + f, aux + dropped
+
+
+def _stack_scan(cfg: ModelConfig, stacked_params, x, fn):
+    """Scan ``fn(lp, x) -> x`` over stacked layer params, with remat.
+
+    cfg.scan_layers=False unrolls instead -- identical math, L-times larger
+    HLO; used by the roofline validation (XLA cost_analysis counts scanned
+    bodies once) and available as a compile-time/perf trade-off.
+    """
+    def body(carry, lp):
+        y, aux = fn(lp, carry[0])
+        return (y, carry[1] + aux), None
+
+    if cfg.remat:
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if cfg.remat_policy == "dots"
+            else None  # save nothing: only the per-layer scan carry survives
+        )
+        body = jax.checkpoint(body, policy=policy)
+    carry = (x, jnp.zeros((), jnp.float32))
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, carry, stacked_params)
+        return x, aux
+    L = jax.tree.leaves(stacked_params)[0].shape[0]
+    for i in range(L):
+        lp = jax.tree.map(lambda a: a[i], stacked_params)
+        carry, _ = body(carry, lp)
+    return carry
+
+
+# ------------------------------------------------------------------- embedding
+def _embed_inputs(cfg: ModelConfig, params, tokens, frontend_embeds):
+    x = layers.embed(tokens, params["embed"])
+    if cfg.family == "vlm" and frontend_embeds is not None:
+        flen = frontend_embeds.shape[1]
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x[:, flen:, :]], axis=1)
+    return x
+
+
+def _head_table(cfg: ModelConfig, params):
+    return params["embed"] if cfg.tie_embeddings else params["head"]
+
+
+def _run_encoder(cfg: ModelConfig, params, frontend_embeds):
+    B, S, _ = frontend_embeds.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    fn = lambda lp, x: _decoder_layer_full(cfg, lp, x, positions, None, causal=False)
+    x, _ = _stack_scan(cfg, params["enc_layers"], frontend_embeds, fn)
+    return layers.rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+# -------------------------------------------------------------------- forward
+def forward_train(
+    cfg: ModelConfig,
+    params,
+    tokens: jax.Array,
+    labels: jax.Array,
+    frontend_embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Mean CE loss + metrics.  encdec: encoder consumes frontend embeds."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    memory_kv = None
+    if cfg.family == "encdec":
+        enc_out = _run_encoder(cfg, params, frontend_embeds)
+        x = layers.embed(tokens, params["embed"])
+        fn = lambda lp, h: _decoder_layer_full(
+            cfg, lp, h, positions,
+            attn.project_cross_kv(cfg, lp["cross"], enc_out), causal=True,
+        )
+    else:
+        x = _embed_inputs(cfg, params, tokens, frontend_embeds)
+        fn = lambda lp, h: _decoder_layer_full(cfg, lp, h, positions, None, causal=True)
+    x, aux = _stack_scan(cfg, params["layers"], x, fn)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    mask = jnp.ones((B, S), bool)
+    if cfg.family == "vlm" and frontend_embeds is not None:
+        mask = positions >= frontend_embeds.shape[1]
+    loss = layers.chunked_softmax_xent(
+        x, _head_table(cfg, params), labels, cfg.logit_chunk, mask
+    )
+    metrics = {"loss": loss, "moe_dropped": aux / max(cfg.n_layers, 1)}
+    return loss, metrics
+
+
+class DecodeState(NamedTuple):
+    """Stacked per-layer caches + (encdec) cross K/V."""
+
+    kv: Optional[attn.KVCache]  # leaves stacked (L, ...)
+    ssm: Optional[ssm.SSMCache]
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]]  # (L, B, Smem, KV, hd)
+
+
+def make_decode_state(
+    cfg: ModelConfig, batch: int, max_len: int, as_specs: bool = False
+) -> DecodeState:
+    """Concrete zeros (or ShapeDtypeStructs for the dry-run).
+
+    as_specs traces the builder abstractly -- a 500k-context cache spec must
+    never allocate host memory (the dry-run runs on a 35 GB box).
+    """
+    if as_specs:
+        return jax.eval_shape(
+            lambda: make_decode_state(cfg, batch, max_len, as_specs=False)
+        )
+    L = cfg.n_layers
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (L,) + a.shape).copy() if a.ndim else jnp.zeros((L,), a.dtype),
+            tree,
+        )
+
+    kv = sm = cross = None
+    if cfg.has_attention:
+        kv = stack(attn.init_kv_cache(cfg, batch, max_len))
+    if cfg.family in ("ssm", "hybrid"):
+        sm = stack(ssm.init_ssm_cache(cfg, batch))
+    if cfg.family == "encdec":
+        hd = cfg.resolved_head_dim
+        shape = (L, batch, max_len, cfg.n_kv_heads, hd)
+        cross = (
+            jnp.zeros(shape, cfg.param_dtype),
+            jnp.zeros(shape, cfg.param_dtype),
+        )
+    state = DecodeState(kv=kv, ssm=sm, cross_kv=cross)
+    if as_specs:
+        state = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state
+        )
+    return state
+
+
+def _decoder_layer_decode(cfg: ModelConfig, lp, x, cache_kv, cache_ssm, cross_kv):
+    """One-token layer step. Returns (x, new_kv, new_ssm)."""
+    h = layers.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    new_kv, new_ssm = cache_kv, cache_ssm
+    if cfg.family == "ssm":
+        mixed, new_ssm = ssm.ssd_decode(cfg, lp["ssm"], h, cache_ssm)
+        return x + mixed, new_kv, new_ssm
+    a, new_kv = attn.decode_attention(cfg, lp["attn"], h, cache_kv)
+    if cfg.family == "hybrid":
+        s, new_ssm = ssm.ssd_decode(cfg, lp["ssm"], h, cache_ssm)
+        a = (a + s) * 0.5
+    x = x + a
+    if "cross" in lp and cross_kv is not None:
+        h = layers.rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+        c, _ = attn.decode_attention(cfg, lp["cross"], h, cache_kv, kv_override=cross_kv)
+        x = x + c
+    h = layers.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    f, _ = _mix_ffn(cfg, lp, h)
+    return x + f, new_kv, new_ssm
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params,
+    tokens: jax.Array,  # (B, 1)
+    state: DecodeState,
+) -> Tuple[jax.Array, DecodeState]:
+    """One serving step: (B,1) token -> (B, V) logits + advanced caches."""
+    x = layers.embed(tokens, params["embed"])
+
+    def body(carry, inp):
+        h = carry
+        lp, kv_l, ssm_l, cross_l = inp
+        h, new_kv, new_ssm = _decoder_layer_decode(cfg, lp, h, kv_l, ssm_l, cross_l)
+        return h, (new_kv, new_ssm)
+
+    xs = (params["layers"], state.kv, state.ssm, state.cross_kv)
+    x, (new_kv, new_ssm) = jax.lax.scan(body, x, xs)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, _head_table(cfg, params))
+    return logits[:, 0, :], DecodeState(new_kv, new_ssm, state.cross_kv)
+
+
+def prefill(
+    cfg: ModelConfig,
+    params,
+    tokens: jax.Array,
+    frontend_embeds: Optional[jax.Array] = None,
+    max_len: Optional[int] = None,
+) -> Tuple[jax.Array, DecodeState]:
+    """Full-sequence pass that also builds the decode caches.
+
+    Returns (last-position logits (B, V), DecodeState).
+    """
+    B, S = tokens.shape
+    C = max_len or S
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _run_encoder(cfg, params, frontend_embeds)
+        x = layers.embed(tokens, params["embed"])
+    else:
+        x = _embed_inputs(cfg, params, tokens, frontend_embeds)
+
+    hd = cfg.resolved_head_dim
+
+    def body(h, lp):
+        hh = layers.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        new_kv = new_ssm = cross = None
+        if cfg.family == "ssm":
+            mixed, new_ssm = ssm.ssd_prefill(cfg, lp["ssm"], hh)
+            return h + mixed, (new_kv, new_ssm, cross)
+        # build KV cache from the projected full sequence
+        k = hh @ lp["attn"]["wk"]
+        v = hh @ lp["attn"]["wv"]
+        k = k.reshape(B, S, cfg.n_kv_heads, hd)
+        v = v.reshape(B, S, cfg.n_kv_heads, hd)
+        cos, sin = layers.rope_angles(positions, hd, cfg.rope_theta)
+        if cfg.qk_norm:
+            k = layers.rms_norm(k, lp["attn"]["k_norm"], cfg.norm_eps)
+        k = layers.apply_rope(k, cos[:, :, None, :], sin[:, :, None, :])
+        new_kv = _ring_pack(cfg, k, v, C, S)
+        a = attn.multi_head_attention(
+            cfg, lp["attn"], hh, positions, causal=True, window=cfg.sliding_window
+        )
+        if cfg.family == "hybrid":
+            sdd, new_ssm = ssm.ssd_prefill(cfg, lp["ssm"], hh)
+            a = (a + sdd) * 0.5
+        h = h + a
+        if "cross" in lp and enc_out is not None:
+            hc = layers.rms_norm(h, lp["ln_cross"], cfg.norm_eps)
+            ck, cv = attn.project_cross_kv(cfg, lp["cross"], enc_out)
+            c = attn.multi_head_attention(
+                cfg, lp["cross"], hc, positions, causal=False, kv_override=(ck, cv)
+            )
+            h = h + c
+            cross = (ck, cv)
+        hh = layers.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        f, _ = _mix_ffn(cfg, lp, hh)
+        return h + f, (new_kv, new_ssm, cross)
+
+    x, (kv, sm, cross) = jax.lax.scan(body, x, params["layers"])
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1, :], _head_table(cfg, params))
+    return logits, DecodeState(kv=kv, ssm=sm, cross_kv=cross)
+
+
+def _ring_pack(cfg: ModelConfig, k, v, C, S) -> attn.KVCache:
+    """Pack prefill K/V into the decode cache layout (ring for SWA)."""
+    B = k.shape[0]
+    W = min(C, cfg.sliding_window) if cfg.sliding_window else C
+    if S >= W:
+        # keep the last W tokens, placed at slots (pos % W): for pos in
+        # [S-W, S), slot = pos % W -- a roll of the last-W slice.
+        tail_k, tail_v = k[:, S - W :], v[:, S - W :]
+        shift = (S - W) % W
+        ck = jnp.roll(tail_k, shift, axis=1)
+        cv = jnp.roll(tail_v, shift, axis=1)
+    else:
+        ck = jnp.pad(k, ((0, 0), (0, W - S), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, W - S), (0, 0), (0, 0)))
+    return attn.KVCache(k=ck, v=cv, length=jnp.asarray(S, jnp.int32))

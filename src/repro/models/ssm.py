@@ -1,0 +1,219 @@
+"""Mamba2 (SSD, state-space duality) mixer: chunked-parallel and decode paths.
+
+Recurrence (per head h, head-dim p, state n):
+    a_t = exp(dt_t * A)             (A < 0, per head)
+    h_t = a_t * h_{t-1} + dt_t * B_t (x) x_t
+    y_t = C_t . h_t + D * x_t
+Chunked parallel form (training/prefill): within a chunk of Q steps the
+quadratic "attention-like" intra term is computed with a decay-masked
+(C B^T) matrix, and a single (H, P, N) state carries across chunks via a
+lax.scan -- the SSD algorithm of the mamba2 paper, with the chunk scan
+keeping peak memory at (B, H, Q, Q) instead of (B, H, S, S).
+
+Decode is the O(1) recurrent update -- this is what makes the long_500k
+cell linear-cost for the ssm/hybrid architectures.
+
+A depthwise causal conv (width 4) precedes the SSM on x, B and C, as in
+the reference implementation; its tail is part of the serving cache.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+CONV_K = 4
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array  # (B, CONV_K-1, d_inner + 2N) last conv inputs
+    state: jax.Array  # (B, H, P, N)
+    length: jax.Array  # () int32
+
+
+def ssm_params_shape(cfg: ModelConfig):
+    D, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    return {
+        "wx": (D, di),
+        "wz": (D, di),
+        "wB": (D, N),
+        "wC": (D, N),
+        "wdt": (D, H),
+        "dt_bias": (H,),
+        "A_log": (H,),
+        "Dskip": (H,),
+        "conv_w": (CONV_K, di + 2 * N),
+        "norm": (di,),
+        "wo": (di, D),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width CONV_K.  u: (B, S, C), w: (K, C)."""
+    out = u * w[CONV_K - 1]
+    for k in range(1, CONV_K):
+        shifted = jnp.pad(u, ((0, 0), (k, 0), (0, 0)))[:, : u.shape[1], :]
+        out = out + shifted * w[CONV_K - 1 - k]
+    return out
+
+
+def _project(cfg: ModelConfig, params, x: jax.Array):
+    """x (B,S,D) -> xin (B,S,H,P), z, B_, C_, dt (after conv+activations)."""
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xin = x @ params["wx"]  # (B,S,di)
+    z = x @ params["wz"]
+    B_ = x @ params["wB"]  # (B,S,N)
+    C_ = x @ params["wC"]
+    dt = x @ params["wdt"]  # (B,S,H)
+    raw = jnp.concatenate([xin, B_, C_], axis=-1)  # pre-conv (cache tail)
+    u = _causal_conv(raw, params["conv_w"])
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+    xin, B_, C_ = u[..., :di], u[..., di : di + N], u[..., di + N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    Bsz, S = x.shape[0], x.shape[1]
+    return xin.reshape(Bsz, S, H, P), z, B_, C_, dt, raw
+
+
+def ssd_parallel(
+    cfg: ModelConfig,
+    params,
+    x: jax.Array,  # (B, S, D)
+    h0: jax.Array | None = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y (B,S,D), final state)."""
+    Bsz, S, D = x.shape
+    N, H, P = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, S)
+
+    xin, z, B_, C_, dt, _ = _project(cfg, params, x)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,)
+    # Ragged tails: pad to a chunk multiple with dt=0 -> a=1 and zero input,
+    # so padded steps are identity on the state and ignored in y.
+    pad = (-S) % Q
+    S_orig = S
+    if pad:
+        xin = jnp.pad(xin, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    la = dt * A  # (B,S,H) log a_t
+    dtx = xin.astype(jnp.float32) * dt[..., None]  # (B,S,H,P)
+
+    # chunk views, scan axis first
+    def chunkview(t, extra_dims):
+        return t.reshape((Bsz, nc, Q) + extra_dims).swapaxes(0, 1)
+
+    la_c = chunkview(la, (H,))
+    dtx_c = chunkview(dtx, (H, P))
+    B_c = chunkview(B_.astype(jnp.float32), (N,))
+    C_c = chunkview(C_.astype(jnp.float32), (N,))
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))  # j <= i
+
+    def body(h, inp):
+        la_k, dtx_k, B_k, C_k = inp  # (B,Q,H), (B,Q,H,P), (B,Q,N), (B,Q,N)
+        cum = jnp.cumsum(la_k, axis=1)  # inclusive (B,Q,H)
+        # intra-chunk: scores[b,h,i,j] = (C_i.B_j) exp(cum_i - cum_j), j<=i
+        CB = jnp.einsum("bin,bjn->bij", C_k, B_k)
+        decay = jnp.exp(
+            jnp.clip(cum[:, :, None, :] - cum[:, None, :, :], -60.0, 0.0)
+        )  # (B,i,j,H)
+        scores = CB[..., None] * decay * tri[None, :, :, None]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", scores, dtx_k)
+        # inter-chunk: y_inter[i] = exp(cum_i) * C_i . h_in
+        Ch = jnp.einsum("bin,bhpn->bihp", C_k, h)
+        y_inter = Ch * jnp.exp(jnp.clip(cum, -60.0, None))[..., None]
+        # state update: h_out = exp(cum_Q) h + sum_j exp(cum_Q - cum_j) dtx_j B_j
+        tot = cum[:, -1:, :]  # (B,1,H)
+        w = jnp.exp(jnp.clip(tot - cum, -60.0, 0.0))  # (B,Q,H)
+        contrib = jnp.einsum("bjh,bjhp,bjn->bhpn", w, dtx_k, B_k)
+        h_new = h * jnp.exp(jnp.clip(tot[:, 0, :], -60.0, 0.0))[:, :, None, None] + contrib
+        return h_new, y_intra + y_inter
+
+    h0 = (
+        h0
+        if h0 is not None
+        else jnp.zeros((Bsz, H, P, N), jnp.float32)
+    )
+    h_final, y_c = jax.lax.scan(body, h0, (la_c, dtx_c, B_c, C_c))
+    y = y_c.swapaxes(0, 1).reshape(Bsz, S, H, P)
+    y = y + xin.astype(jnp.float32) * params["Dskip"].astype(jnp.float32)[:, None]
+    y = y.reshape(Bsz, S, cfg.d_inner)[:, :S_orig]
+    # gated RMSNorm then output projection
+    y = layers.rms_norm(
+        (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+        params["norm"],
+        cfg.norm_eps,
+    )
+    return y @ params["wo"], h_final
+
+
+def ssd_prefill(
+    cfg: ModelConfig, params, x: jax.Array
+) -> Tuple[jax.Array, SSMCache]:
+    """Parallel pass that also returns the serving cache (state + conv tail)."""
+    Bsz, S, _ = x.shape
+    _, _, _, _, _, raw = _project(cfg, params, x)
+    y, h_final = ssd_parallel(cfg, params, x)
+    tail = raw[:, -(CONV_K - 1) :, :].astype(cfg.param_dtype)
+    pad = CONV_K - 1 - tail.shape[1]
+    if pad > 0:
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+    return y, SSMCache(
+        conv=tail, state=h_final, length=jnp.asarray(S, jnp.int32)
+    )
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> SSMCache:
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    return SSMCache(
+        conv=jnp.zeros((batch, CONV_K - 1, di + 2 * N), cfg.param_dtype),
+        state=jnp.zeros((batch, H, P, N), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def ssd_decode(
+    cfg: ModelConfig,
+    params,
+    x: jax.Array,  # (B, 1, D)
+    cache: SSMCache,
+) -> Tuple[jax.Array, SSMCache]:
+    """O(1) recurrent step."""
+    Bsz = x.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xt = x[:, 0, :]
+    xin = xt @ params["wx"]
+    z = xt @ params["wz"]
+    B_ = xt @ params["wB"]
+    C_ = xt @ params["wC"]
+    dt = xt @ params["wdt"]
+    u_new = jnp.concatenate([xin, B_, C_], axis=-1)  # (B, di+2N)
+    win = jnp.concatenate([cache.conv, u_new[:, None, :]], axis=1)  # (B,K,ch)
+    u = jnp.einsum("bkc,kc->bc", win, params["conv_w"])
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+    xin, B_, C_ = u[:, :di], u[:, di : di + N], u[:, di + N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)  # (B,H)
+    xh = xin.reshape(Bsz, H, P).astype(jnp.float32)
+    h = cache.state * a[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, B_.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhpn->bhp", C_.astype(jnp.float32), h)
+    y = y + xh * params["Dskip"].astype(jnp.float32)[:, None]
+    y = y.reshape(Bsz, 1, di)
+    y = layers.rms_norm(
+        (y * jax.nn.silu(z.astype(jnp.float32))[:, None, :]).astype(x.dtype),
+        params["norm"],
+        cfg.norm_eps,
+    )
+    new_cache = SSMCache(conv=win[:, 1:, :], state=h, length=cache.length + 1)
+    return y @ params["wo"], new_cache

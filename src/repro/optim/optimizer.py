@@ -1,0 +1,87 @@
+"""AdamW with fp32 master weights over bf16 compute params.
+
+Plain-JAX (no optax dependency in this container).  State keeps fp32
+master copies so bf16 training does not lose small updates; the train step
+casts masters back to the compute dtype after each update.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # () int32
+    master: Any  # fp32 copies of params
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    # NOTE: force distinct buffers -- astype(f32) on f32 params is an alias,
+    # and XLA dedupes zero constants; donated train states must never hold
+    # the same buffer twice.
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32).copy()
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def cosine_schedule(
+    step: jax.Array, peak_lr: float, warmup: int, total: int, floor: float = 0.1
+) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = (s + 1) / jnp.maximum(warmup, 1)  # never 0: step 0 must move
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(s < warmup, warm, cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    lr: jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    compute_dtype=jnp.bfloat16,
+) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1 - b1**t
+    c2 = 1 - b2**t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        update = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p
+        return m, v, p - lr * update
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(state.master)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    mu = jax.tree.unflatten(treedef, [o[0] for o in out])
+    nu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    master = jax.tree.unflatten(treedef, [o[2] for o in out])
+    params = jax.tree.map(lambda p: p.astype(compute_dtype), master)
+    return params, AdamWState(step=step, master=master, mu=mu, nu=nu)

@@ -1,0 +1,3 @@
+from repro.serving.serve_loop import make_serve_step, make_prefill_fn, greedy_generate
+
+__all__ = ["make_serve_step", "make_prefill_fn", "greedy_generate"]

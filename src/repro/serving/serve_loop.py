@@ -1,0 +1,94 @@
+"""Serving: jitted prefill / decode steps with sharded caches.
+
+serve_step is the unit the decode dry-run cells lower: one new token for
+every sequence in the batch against a seq_len-deep cache.  Cache layout per
+family (attention KV ring buffers for SWA, SSM state, cross-attention
+memory) is decided in models/; here we only wire shardings and the
+request-batching driver used by the examples.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+def make_serve_step(
+    cfg: ModelConfig,
+    mesh: Optional[Mesh] = None,
+    batch: int = 1,
+    seq_shard: Optional[bool] = None,  # None = auto (specs.decode_state_specs)
+):
+    """(params, tokens (B,1), DecodeState) -> (logits (B,V), DecodeState)."""
+    step = functools.partial(M.decode_step, cfg)
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(2,))
+    from repro.sharding import specs
+
+    sh = specs.serve_step_shardings(cfg, mesh, batch, seq_shard=seq_shard)
+    return jax.jit(
+        step, in_shardings=sh["in"], out_shardings=sh["out"], donate_argnums=(2,)
+    )
+
+
+def make_prefill_fn(
+    cfg: ModelConfig,
+    mesh: Optional[Mesh] = None,
+    batch: int = 1,
+    max_len: Optional[int] = None,
+):
+    """Positional signature: (params, tokens[, frontend_embeds])."""
+    if cfg.frontend is not None:
+        fn = lambda params, tokens, fe: M.prefill(cfg, params, tokens, fe, max_len=max_len)
+    else:
+        fn = lambda params, tokens: M.prefill(cfg, params, tokens, max_len=max_len)
+    if mesh is None:
+        return jax.jit(fn)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.sharding import specs
+
+    ps = specs._named(mesh, specs.param_specs(cfg, mesh))
+    dp = specs.dp_axes(mesh)
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+    bdim = dp if (batch % max(ndp, 1) == 0 and ndp > 1) else None
+    toks = NamedSharding(mesh, P(bdim, None))
+    ins = (ps, toks)
+    if cfg.frontend is not None:
+        ins = ins + (NamedSharding(mesh, P(bdim, None, None)),)
+    m = mesh.shape.get("model", 1)
+    logits = NamedSharding(
+        mesh, P(bdim, specs._maybe(cfg.vocab_size, m, "model"))
+    )
+    cache = specs._named(mesh, specs.decode_state_specs(cfg, mesh, batch))
+    return jax.jit(fn, in_shardings=ins, out_shardings=(logits, cache))
+
+
+def greedy_generate(
+    cfg: ModelConfig,
+    params,
+    prompt_tokens: jax.Array,  # (B, S)
+    n_new: int,
+    frontend_embeds: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Batched greedy decoding driver (examples/tests)."""
+    B, S = prompt_tokens.shape
+    logits, state = M.prefill(
+        cfg, params, prompt_tokens, frontend_embeds, max_len=S + n_new
+    )
+    step = make_serve_step(cfg)
+    outs = []
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    for _ in range(n_new):
+        outs.append(tok)
+        logits, state = step(params, tok, state)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,3 @@
+from repro.sharding import specs
+
+__all__ = ["specs"]

@@ -1,0 +1,267 @@
+"""PartitionSpec policies per architecture (DP / TP / EP / SP).
+
+Axis roles on the production mesh (launch/mesh.py):
+  pod   -- data parallelism across pods (gradient all-reduce rides ICI/DCN)
+  data  -- data parallelism within a pod
+  model -- tensor parallelism: attention heads / FFN width / vocab rows /
+           expert inner width / SSM heads; also the BST engine's vertical
+           subtree axis (core/distributed.py)
+
+Dimension-size rules enforced here: a dim is only sharded when divisible by
+the axis size; otherwise it falls back to replication (GSPMD would pad, but
+padding wastes roofline, so we prefer explicit fallback and record it).
+
+The functions return pytrees of NamedSharding matching the corresponding
+params/state/batch pytrees, used as pjit in_shardings by the dry-run,
+launcher and checkpoint reshard.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _axis(mesh: Mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _maybe(dim: int, size: int, axis: str) -> Optional[str]:
+    """Shard ``dim`` over ``axis`` of ``size`` only if divisible."""
+    return axis if size > 1 and dim % size == 0 else None
+
+
+def all_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh) -> Dict[str, Any]:
+    """PartitionSpec tree matching model.init_params(cfg, ...)."""
+    m = _axis(mesh, "model")
+    if cfg.sharding_strategy == "dp_only":
+        m = 1  # every _maybe() falls back to replication
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+
+    def attn_spec():
+        s = {
+            # (D, H*hd): shard the head dim product over model
+            "wq": P(None, _maybe(H * hd, m, "model")),
+            "wk": P(None, _maybe(KV * hd, m, "model")),
+            "wv": P(None, _maybe(KV * hd, m, "model")),
+            "wo": P(_maybe(H * hd, m, "model"), None),
+        }
+        if cfg.qk_norm:
+            s["q_norm"] = P(None)
+            s["k_norm"] = P(None)
+        return s
+
+    def mlp_spec():
+        return {
+            "w_gate": P(None, _maybe(F, m, "model")),
+            "w_up": P(None, _maybe(F, m, "model")),
+            "w_down": P(_maybe(F, m, "model"), None),
+        }
+
+    def moe_spec():
+        return {
+            "router": P(None, None),
+            # experts replicated across E dim, TP inside each expert
+            "w_gate": P(None, None, _maybe(F, m, "model")),
+            "w_up": P(None, None, _maybe(F, m, "model")),
+            "w_down": P(None, _maybe(F, m, "model"), None),
+        }
+
+    def ssm_spec():
+        di, N, Hs = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        return {
+            "wx": P(None, _maybe(di, m, "model")),
+            "wz": P(None, _maybe(di, m, "model")),
+            "wB": P(None, None),
+            "wC": P(None, None),
+            "wdt": P(None, _maybe(Hs, m, "model")),
+            "dt_bias": P(_maybe(Hs, m, "model")),
+            "A_log": P(_maybe(Hs, m, "model")),
+            "Dskip": P(_maybe(Hs, m, "model")),
+            "conv_w": P(None, None),
+            "norm": P(_maybe(di, m, "model")),
+            "wo": P(_maybe(di, m, "model"), None),
+        }
+
+    def layer_spec(role: str):
+        s: Dict[str, Any] = {"ln1": P(None)}
+        if cfg.family == "ssm":
+            s["ssm"] = ssm_spec()
+            return s
+        s["attn"] = attn_spec()
+        if cfg.family == "hybrid":
+            s["ssm"] = ssm_spec()
+        if role == "decoder" and cfg.family == "encdec":
+            s["ln_cross"] = P(None)
+            s["cross"] = attn_spec()
+        s["ln2"] = P(None)
+        if cfg.family == "moe":
+            s["moe"] = moe_spec()
+        elif cfg.d_ff > 0:
+            s["mlp"] = mlp_spec()
+        return s
+
+    def add_layer_dim(tree):
+        return jax.tree.map(
+            lambda p: P(*((None,) + tuple(p))), tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    specs: Dict[str, Any] = {
+        "embed": P(_maybe(V, m, "model"), None),  # vocab rows over model
+        "final_norm": P(None),
+        "layers": add_layer_dim(layer_spec("decoder")),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = P(_maybe(V, m, "model"), None)
+    if cfg.family == "encdec":
+        specs["enc_layers"] = add_layer_dim(layer_spec("encoder"))
+        specs["enc_final_norm"] = P(None)
+    return specs
+
+
+def state_specs(cfg: ModelConfig, mesh: Mesh):
+    """Specs for TrainState(params, AdamWState, error_feedback)."""
+    from repro.models import model as M
+    from repro.optim.optimizer import AdamWState
+    from repro.training.train_loop import TrainState
+
+    ps = param_specs(cfg, mesh)
+    opt_ps = ps
+    if cfg.zero1 and "data" in mesh.shape and mesh.shape["data"] > 1:
+        d = mesh.shape["data"]
+        shapes = jax.eval_shape(lambda: M.init_params(cfg, jax.random.key(0)))
+
+        def zero_shard(spec: P, shape) -> P:
+            dims = list(tuple(spec) + (None,) * (len(shape.shape) - len(tuple(spec))))
+            # first unsharded dim divisible by the data axis gets sharded
+            for i, n in enumerate(shape.shape):
+                if dims[i] is None and n % d == 0:
+                    dims[i] = "data"
+                    return P(*dims)
+            return spec
+
+        opt_ps = jax.tree.map(
+            zero_shard, ps, shapes, is_leaf=lambda x: isinstance(x, P)
+        )
+    return TrainState(
+        params=ps,
+        opt=AdamWState(step=P(), master=opt_ps, mu=opt_ps, nu=opt_ps),
+        error_feedback=(),
+    )
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh) -> Dict[str, P]:
+    dp = all_axes(mesh) if cfg.sharding_strategy == "dp_only" else dp_axes(mesh)
+    return {
+        "tokens": P(dp, None),
+        "labels": P(dp, None),
+        "frontend": P(dp, None, None),
+    }
+
+
+def _named(mesh: Mesh, tree):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def train_step_shardings(cfg: ModelConfig, mesh: Mesh) -> Dict[str, Any]:
+    """in/out shardings for make_train_step's (state, tokens, labels[, fe])."""
+    ss = _named(mesh, state_specs(cfg, mesh))
+    bs = batch_specs(cfg, mesh)
+    ins = (
+        ss,
+        NamedSharding(mesh, bs["tokens"]),
+        NamedSharding(mesh, bs["labels"]),
+    )
+    if cfg.frontend is not None:
+        ins = ins + (NamedSharding(mesh, bs["frontend"]),)
+    rep = NamedSharding(mesh, P())
+    return {"in": ins, "out": (ss, rep)}
+
+
+# ------------------------------------------------------------------- serving
+def decode_state_specs(
+    cfg: ModelConfig, mesh: Mesh, batch: int, seq_shard: bool | None = None
+):
+    """Specs for model.DecodeState: batch over DP when divisible, heads/state
+    over model.
+
+    seq_shard=True shards the cache *sequence* dim over the model axis
+    instead of kv heads (sequence-parallel decode): each chip owns 1/m of
+    the window, computes partial attention, and GSPMD reduces the tiny
+    softmax statistics -- the fix for archs whose kv_heads < model size,
+    where head-sharding falls back to replication (§Perf iter 2).
+    Default (None) = auto: seq-shard exactly when head-sharding can't fire
+    (adopted after iter 2: 9x memory / 3400x collective reduction).
+    """
+    from repro.models import attention as attn_mod
+    from repro.models import ssm as ssm_mod
+    from repro.models.model import DecodeState
+
+    m = _axis(mesh, "model")
+    dp = dp_axes(mesh)
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+    bdim = dp if (batch % max(ndp, 1) == 0 and ndp > 1) else None
+    kv_head = _maybe(cfg.n_kv_heads, m, "model")
+    if seq_shard is None:  # auto: sequence-parallel cache iff heads can't shard
+        seq_shard = cfg.has_attention and kv_head is None and m > 1
+
+    kv = sm = cross = None
+    if cfg.has_attention:
+        if seq_shard:
+            kv = attn_mod.KVCache(
+                k=P(None, bdim, "model", None, None),
+                v=P(None, bdim, "model", None, None),
+                length=P(None),
+            )
+        else:
+            kv = attn_mod.KVCache(
+                k=P(None, bdim, None, kv_head, None),
+                v=P(None, bdim, None, kv_head, None),
+                length=P(None),
+            )
+    if cfg.family in ("ssm", "hybrid"):
+        sm = ssm_mod.SSMCache(
+            conv=P(None, bdim, None, None),
+            state=P(None, bdim, _maybe(cfg.ssm_heads, m, "model"), None, None),
+            length=P(None),
+        )
+    if cfg.family == "encdec":
+        cross = (
+            P(None, bdim, None, kv_head, None),
+            P(None, bdim, None, kv_head, None),
+        )
+    return DecodeState(kv=kv, ssm=sm, cross_kv=cross)
+
+
+def serve_step_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, seq_shard: bool = False):
+    dp = dp_axes(mesh)
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+    bdim = dp if (batch % max(ndp, 1) == 0 and ndp > 1) else None
+    ps = _named(mesh, param_specs(cfg, mesh))
+    toks = NamedSharding(mesh, P(bdim, None))
+    cache = _named(mesh, decode_state_specs(cfg, mesh, batch, seq_shard=seq_shard))
+    m = _axis(mesh, "model")
+    logits = NamedSharding(mesh, P(bdim, _maybe(cfg.vocab_size, m, "model")))
+    return {"in": (ps, toks, cache), "out": (logits, cache)}

@@ -1,0 +1,240 @@
+"""Training step and loop: grad accumulation, compression, fault tolerance.
+
+Distributed-optimization features (DESIGN.md §5):
+  * microbatch gradient accumulation (lax.scan over microbatches) --
+    pipelining lever for the memory roofline term;
+  * optional gradient compression before the data-parallel all-reduce:
+    "bf16" halves DP collective bytes, "int8" quarters them with per-leaf
+    scale + error feedback (the residual is carried in the train state so
+    compression noise does not bias the update);
+  * straggler / failure handling lives in the driver (launch/train.py +
+    checkpoint/elastic): the step itself is a pure function of
+    (state, batch), which is what makes restart/reshard trivial.
+
+Under pjit, gradients of data-parallel-replicated params are all-reduced by
+XLA automatically; the compression hook wraps that reduction explicitly via
+shard_map when enabled, so the collective really shrinks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    microbatches: int = 1  # grad accumulation factor
+    compression: Optional[str] = None  # None | "bf16" | "int8"
+    b1: float = 0.9
+    b2: float = 0.95
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt.AdamWState
+    error_feedback: Any  # int8 compression residuals (or empty tuple)
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key) -> TrainState:
+    params = M.init_params(cfg, key)
+    ef = ()
+    if tcfg.compression == "int8":
+        ef = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return TrainState(params=params, opt=opt.adamw_init(params), error_feedback=ef)
+
+
+# ----------------------------------------------------------------- compression
+def _compress_grads(grads, error_feedback, kind: Optional[str], axis_names):
+    """Quantize -> psum over DP axes -> dequantize (+ error feedback)."""
+    if kind is None:
+        return jax.tree.map(lambda g: jax.lax.psum(g, axis_names), grads), error_feedback
+    if kind == "bf16":
+        out = jax.tree.map(
+            lambda g: jax.lax.psum(g.astype(jnp.bfloat16), axis_names).astype(
+                jnp.float32
+            ),
+            grads,
+        )
+        return out, error_feedback
+
+    # int8 with per-leaf absmax scale and error feedback
+    def q(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        qg = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        err = g - qg.astype(jnp.float32) * scale
+        return qg, scale, err
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error_feedback)
+    qs = [q(g, e) for g, e in zip(flat_g, flat_e)]
+    summed = [
+        jax.lax.psum(qg.astype(jnp.int32), axis_names).astype(jnp.float32)
+        * jax.lax.pmax(scale, axis_names)
+        for qg, scale, _ in qs
+    ]
+    new_ef = jax.tree.unflatten(treedef, [e for _, _, e in qs])
+    return jax.tree.unflatten(treedef, summed), new_ef
+
+
+# ------------------------------------------------------------------ train step
+def make_train_step(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    mesh: Optional[Mesh] = None,
+    mode: str = "pjit",  # "pjit" (TP+DP, XLA collectives) | "dp_shard_map"
+    donate: bool = True,
+):
+    """Returns a jitted (state, tokens, labels[, frontend]) -> (state, metrics).
+
+    * mesh=None            -- single-device step for tests/examples.
+    * mode="pjit"          -- production path: params sharded per
+      sharding/specs.py, batch over (pod, data); XLA inserts the gradient
+      all-reduce.  This is what the dry-run lowers.
+    * mode="dp_shard_map"  -- pure data parallelism over every mesh axis with
+      params replicated; the DP gradient all-reduce goes through the explicit
+      compression hook (bf16/int8 + error feedback) so collective bytes
+      really shrink.  Used by the compression §Perf experiments and suited
+      to the <2B archs whose params fit per chip.
+    """
+
+    def loss_fn(params, tokens, labels, frontend):
+        loss, metrics = M.forward_train(cfg, params, tokens, labels, frontend)
+        return loss, metrics
+
+    def accumulate(params, batch):
+        tokens, labels, frontend = batch
+        mb = tcfg.microbatches
+        if mb == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, tokens, labels, frontend
+            )
+            return loss, metrics, grads
+        Bl = tokens.shape[0]
+        assert Bl % mb == 0, (Bl, mb)
+        split = lambda t: (
+            None if t is None else t.reshape((mb, Bl // mb) + t.shape[1:])
+        )
+        mtok, mlab, mfe = split(tokens), split(labels), split(frontend)
+
+        def body(carry, xs):
+            acc_loss, acc_grads = carry
+            tk, lb = xs[0], xs[1]
+            fe = xs[2] if len(xs) > 2 else None
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, tk, lb, fe
+            )
+            acc_grads = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / mb, acc_grads, grads
+            )
+            return (acc_loss + loss / mb, acc_grads), metrics
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        xs = (mtok, mlab) if mfe is None else (mtok, mlab, mfe)
+        (loss, grads), metrics = jax.lax.scan(body, (jnp.zeros(()), zero_g), xs)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss, metrics, grads
+
+    def finish(state, loss, metrics, grads, ef):
+        grads, gnorm = opt.clip_by_global_norm(grads, tcfg.clip_norm)
+        lr = opt.cosine_schedule(
+            state.opt.step, tcfg.peak_lr, tcfg.warmup_steps, tcfg.total_steps
+        )
+        params, opt_state = opt.adamw_update(
+            grads,
+            state.opt,
+            lr,
+            b1=tcfg.b1,
+            b2=tcfg.b2,
+            weight_decay=tcfg.weight_decay,
+            compute_dtype=cfg.param_dtype,
+        )
+        metrics = dict(metrics)
+        metrics.update(loss=loss, grad_norm=gnorm, lr=lr)
+        return TrainState(params, opt_state, ef), metrics
+
+    def step_plain(state: TrainState, tokens, labels, frontend=None):
+        loss, metrics, grads = accumulate(state.params, (tokens, labels, frontend))
+        return finish(state, loss, metrics, grads, state.error_feedback)
+
+    if mesh is None:
+        return jax.jit(step_plain, donate_argnums=(0,) if donate else ())
+
+    if mode == "pjit":
+        from repro.sharding import specs
+
+        shardings = specs.train_step_shardings(cfg, mesh)
+        return jax.jit(
+            step_plain,
+            in_shardings=shardings["in"],
+            out_shardings=shardings["out"],
+            donate_argnums=(0,) if donate else (),
+        )
+
+    # ---- dp_shard_map: explicit, compressible DP all-reduce
+    axes = tuple(mesh.axis_names)
+    ndev = 1
+    for a in axes:
+        ndev *= mesh.shape[a]
+
+    def step_dp(state: TrainState, tokens, labels, frontend=None):
+        loss, metrics, grads = accumulate(state.params, (tokens, labels, frontend))
+        grads, ef = _compress_grads(grads, state.error_feedback, tcfg.compression, axes)
+        grads = jax.tree.map(lambda g: g / ndev, grads)
+        loss = jax.lax.pmean(loss, axes)
+        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, axes), metrics)
+        return finish(state, loss, metrics, grads, ef)
+
+    batch_spec = P(axes)  # batch dim sharded over every axis
+    state_spec = P()  # replicated params/opt
+    return jax.jit(
+        jax.shard_map(
+            step_dp,
+            mesh=mesh,
+            in_specs=(state_spec, batch_spec, batch_spec, None),
+            out_specs=(state_spec, P()),
+            check_vma=False,
+        ),
+        donate_argnums=(0,) if donate else (),
+    )
+
+
+# ------------------------------------------------------------------ train loop
+def train_loop(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    pipeline,
+    steps: int,
+    state: Optional[TrainState] = None,
+    step0: int = 0,
+    key=None,
+    callback=None,
+):
+    """Simple host loop used by examples/ and tests (single process)."""
+    key = key if key is not None else jax.random.key(0)
+    state = state if state is not None else init_train_state(cfg, tcfg, key)
+    step_fn = make_train_step(cfg, tcfg)
+    history = []
+    for s in range(step0, step0 + steps):
+        tokens, labels = pipeline.batch_at(s)
+        new_state, metrics = step_fn(state, jnp.asarray(tokens), jnp.asarray(labels))
+        state = new_state
+        history.append({k: float(v) for k, v in metrics.items()})
+        if callback is not None:
+            callback(s, state, history[-1])
+    return state, history

@@ -1,0 +1,21 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here -- smoke tests and benches must
+see the real single-CPU device; only launch/dryrun.py (a separate process)
+forces 512 placeholder devices."""
+
+import numpy as np
+import pytest
+
+from repro.core import tree as tree_lib
+from repro.data.keysets import make_tree_data
+
+
+@pytest.fixture(scope="session")
+def small_tree():
+    keys, values = make_tree_data(1000, seed=7)
+    return tree_lib.build_tree(keys, values), keys, values
+
+
+@pytest.fixture(scope="session")
+def medium_tree():
+    keys, values = make_tree_data((1 << 12) - 1, seed=11)
+    return tree_lib.build_tree(keys, values), keys, values

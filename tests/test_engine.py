@@ -1,0 +1,85 @@
+"""BSTEngine: strategy equivalence + paper-preset behaviour."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import BSTEngine, EngineConfig, PAPER_CONFIGS
+from repro.data.keysets import make_key_sets, make_tree_data
+
+
+@pytest.fixture(scope="module")
+def engines():
+    keys, values = make_tree_data(2047, seed=3)
+    return {
+        name: BSTEngine(keys, values, cfg) for name, cfg in PAPER_CONFIGS.items()
+    }, keys, values
+
+
+def test_all_strategies_equivalent(engines):
+    engs, keys, values = engines
+    rng = np.random.default_rng(0)
+    q = rng.choice(np.concatenate([keys, keys + 1]), size=1024).astype(np.int32)
+    ref = None
+    for name, eng in engs.items():
+        v, f = eng.lookup(q)
+        v, f = np.asarray(v), np.asarray(f)
+        if ref is None:
+            ref = (v, f)
+        assert np.array_equal(v, ref[0]), name
+        assert np.array_equal(f, ref[1]), name
+
+
+def test_found_values_correct(engines):
+    engs, keys, values = engines
+    kv = dict(zip(keys.tolist(), values.tolist()))
+    rng = np.random.default_rng(1)
+    q = rng.choice(keys, 512).astype(np.int32)
+    v, f = engs["Hyb8q"].lookup(q)
+    assert bool(np.all(np.asarray(f)))
+    for qi, vi in zip(q.tolist(), np.asarray(v).tolist()):
+        assert kv[qi] == vi
+
+
+def test_memory_accounting(engines):
+    engs, *_ = engines
+    base = engs["Hrz"].memory_nodes()
+    assert engs["Dup4"].memory_nodes() == 4 * base
+    assert engs["Dup8"].memory_nodes() == 8 * base
+    assert engs["Hyb8"].memory_nodes() == base  # no duplication (paper Fig.8)
+
+
+@given(
+    st.integers(10, 400),
+    st.sampled_from(["Hrz", "Dup4", "Hyb4", "Hyb8q"]),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=12, deadline=None)
+def test_engine_property_random_trees(n_keys, impl, seed):
+    keys, values = make_tree_data(n_keys, seed=seed % 1000)
+    eng = BSTEngine(keys, values, PAPER_CONFIGS[impl])
+    rng = np.random.default_rng(seed % 2**31)
+    q = rng.choice(np.concatenate([keys, keys + 1]), size=128).astype(np.int32)
+    v, f = eng.lookup(q)
+    kv = dict(zip(keys.tolist(), values.tolist()))
+    for qi, vi, fi in zip(q.tolist(), np.asarray(v).tolist(), np.asarray(f).tolist()):
+        if qi in kv:
+            assert fi and vi == kv[qi]
+        else:
+            assert not fi
+
+
+def test_kernel_backed_engine_matches(engines):
+    """use_kernel=True routes descent through the Pallas kernel."""
+    _, keys, values = engines
+    rng = np.random.default_rng(5)
+    q = rng.choice(np.concatenate([keys, keys + 1]), size=512).astype(np.int32)
+    ref_v, ref_f = BSTEngine(keys, values, EngineConfig(strategy="hrz")).lookup(q)
+    for cfg in (
+        EngineConfig(strategy="hrz", use_kernel=True),
+        EngineConfig(strategy="hyb", n_trees=4, mapping="queue", use_kernel=True),
+    ):
+        v, f = BSTEngine(keys, values, cfg).lookup(q)
+        assert np.array_equal(np.asarray(v), np.asarray(ref_v)), cfg.name
+        assert np.array_equal(np.asarray(f), np.asarray(ref_f)), cfg.name

@@ -1,0 +1,139 @@
+"""Training substrate: optimization, accumulation, compression, pipeline."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.data.pipeline import TokenPipeline
+from repro.optim import optimizer as opt
+from repro.training.train_loop import (
+    TrainConfig,
+    init_train_state,
+    make_train_step,
+    train_loop,
+)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return smoke_config("tinyllama_1p1b")
+
+
+def test_loss_decreases_over_steps(cfg):
+    """Memorize one fixed batch: loss must fall well below the ln(V) floor
+    of the uniform synthetic stream."""
+    import dataclasses as dc
+
+    tcfg = TrainConfig(peak_lr=3e-3, warmup_steps=2, total_steps=30)
+
+    class FixedBatch:
+        def __init__(self, pipe):
+            self._b = pipe.batch_at(0)
+
+        def batch_at(self, step):
+            return self._b
+
+    pipe = FixedBatch(TokenPipeline(cfg.vocab_size, seq_len=32, global_batch=4, seed=0))
+    state, hist = train_loop(cfg, tcfg, pipe, steps=25)
+    first = hist[0]["loss"]
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first - 0.5, (first, last)
+    assert all(np.isfinite(h["loss"]) for h in hist)
+
+
+def test_grad_accumulation_equivalence(cfg):
+    """microbatches=4 must equal microbatches=1 on the same global batch."""
+    pipe = TokenPipeline(cfg.vocab_size, seq_len=16, global_batch=8, seed=1)
+    tokens, labels = pipe.batch_at(0)
+    outs = {}
+    for mb in (1, 4):
+        tcfg = TrainConfig(peak_lr=1e-3, warmup_steps=1, total_steps=10, microbatches=mb)
+        state = init_train_state(cfg, tcfg, jax.random.key(0))
+        step = make_train_step(cfg, tcfg)
+        new_state, metrics = step(state, jnp.asarray(tokens), jnp.asarray(labels))
+        outs[mb] = (new_state.params, metrics)
+    p1 = jax.tree.leaves(outs[1][0])
+    p4 = jax.tree.leaves(outs[4][0])
+    for a, b in zip(p1, p4):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=5e-3, rtol=5e-2
+        )
+
+
+def test_adamw_reference_behaviour():
+    params = {"w": jnp.ones((4,)) * 2.0}
+    state = opt.adamw_init(params)
+    grads = {"w": jnp.ones((4,))}
+    p1, state = opt.adamw_update(
+        grads, state, jnp.asarray(0.1), weight_decay=0.0, compute_dtype=jnp.float32
+    )
+    # first Adam step moves by ~lr in the gradient direction
+    np.testing.assert_allclose(np.asarray(p1["w"]), 2.0 - 0.1, atol=1e-3)
+    # weight decay pulls toward zero
+    p2, _ = opt.adamw_update(
+        grads, opt.adamw_init(params), jnp.asarray(0.1),
+        weight_decay=1.0, compute_dtype=jnp.float32,
+    )
+    assert float(p2["w"][0]) < float(p1["w"][0])
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((3,), 100.0)}
+    clipped, gn = opt.clip_by_global_norm(g, 1.0)
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+    assert float(gn) > 100
+
+
+def test_cosine_schedule_shape():
+    lrs = [float(opt.cosine_schedule(jnp.asarray(s), 1.0, 10, 100)) for s in range(100)]
+    # warmup counts from 1 so step 0 moves; peak reached at step warmup-1
+    assert abs(lrs[0] - 0.1) < 1e-6 and abs(lrs[9] - 1.0) < 0.01
+    assert lrs[99] < 0.2 and all(l > 0 for l in lrs)
+    assert all(b <= a + 1e-6 for a, b in zip(lrs[10:], lrs[11:]))  # decays
+
+
+def test_pipeline_stateless_resume():
+    pipe = TokenPipeline(1000, seq_len=8, global_batch=4, seed=42)
+    a = pipe.batch_at(17)
+    b = pipe.batch_at(17)
+    np.testing.assert_array_equal(a[0], b[0])
+    # host sharding: different hosts, different data; union is deterministic
+    p0 = TokenPipeline(1000, 8, 4, seed=42, host_index=0, host_count=2)
+    p1 = TokenPipeline(1000, 8, 4, seed=42, host_index=1, host_count=2)
+    assert p0.local_batch == 2
+    assert not np.array_equal(p0.batch_at(3)[0], p1.batch_at(3)[0])
+
+
+def test_labels_are_shifted_tokens():
+    pipe = TokenPipeline(1000, seq_len=8, global_batch=2, seed=0)
+    toks, labs = pipe.batch_at(0)
+    np.testing.assert_array_equal(toks[:, 1:], labs[:, :-1])
+
+
+def test_int8_compression_roundtrip_error_feedback():
+    """Compression hook: quantization error is carried, not lost."""
+    from repro.training.train_loop import _compress_grads
+
+    # single-device psum == identity, so test the quantization mechanics
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("data",))
+    g = {"w": jnp.asarray([0.1, -0.01, 0.5, 0.003], jnp.float32)}
+    ef = {"w": jnp.zeros((4,), jnp.float32)}
+
+    def run(g, ef):
+        return _compress_grads(g, ef, "int8", ("data",))
+
+    out, new_ef = jax.jit(
+        jax.shard_map(run, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+                      check_vma=False)
+    )(g, ef)
+    # dequantized + error ~= original
+    np.testing.assert_allclose(
+        np.asarray(out["w"]) + np.asarray(new_ef["w"]), np.asarray(g["w"]), atol=1e-6
+    )

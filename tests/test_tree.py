@@ -1,0 +1,107 @@
+"""Property tests for the BFS tree layout and reference search."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tree as T
+
+
+@st.composite
+def key_value_sets(draw, max_n=600):
+    n = draw(st.integers(1, max_n))
+    keys = draw(
+        st.lists(
+            st.integers(-(2**30), 2**30 - 1), min_size=n, max_size=n, unique=True
+        )
+    )
+    values = draw(st.lists(st.integers(0, 2**30), min_size=n, max_size=n))
+    return np.array(keys, np.int32), np.array(values, np.int32)
+
+
+class TestLayout:
+    def test_level_offsets(self):
+        assert [T.level_offset(l) for l in range(5)] == [0, 1, 3, 7, 15]
+        assert [T.level_size(l) for l in range(5)] == [1, 2, 4, 8, 16]
+
+    def test_eytzinger_is_bst(self, small_tree):
+        tree, _, _ = small_tree
+        keys = np.asarray(tree.keys)
+        n = tree.n_nodes
+        for i in range((n - 1) // 2):
+            l, r = 2 * i + 1, 2 * i + 2
+            assert keys[l] < keys[i] or keys[l] == T.SENTINEL_KEY
+            assert keys[r] > keys[i] or keys[r] == T.SENTINEL_KEY
+
+    def test_inorder_is_sorted(self, small_tree):
+        tree, keys, _ = small_tree
+        bfs = np.asarray(tree.keys)
+
+        def inorder(i, out):
+            if i >= tree.n_nodes:
+                return
+            inorder(2 * i + 1, out)
+            out.append(bfs[i])
+            inorder(2 * i + 2, out)
+
+        out = []
+        import sys
+
+        sys.setrecursionlimit(100000)
+        inorder(0, out)
+        real = [k for k in out if k != T.SENTINEL_KEY]
+        assert real == sorted(keys.tolist())
+
+    @given(key_value_sets())
+    @settings(max_examples=25, deadline=None)
+    def test_search_finds_all_inserted(self, kv):
+        keys, values = kv
+        tree = T.build_tree(keys, values)
+        v, f = T.search_reference(tree, jnp.asarray(keys))
+        assert bool(np.all(np.asarray(f)))
+        assert np.array_equal(np.asarray(v), values)
+
+    @given(key_value_sets(), st.lists(st.integers(-(2**31), 2**31 - 2), min_size=1, max_size=64))
+    @settings(max_examples=25, deadline=None)
+    def test_search_rejects_absent(self, kv, probes):
+        keys, values = kv
+        tree = T.build_tree(keys, values)
+        probes = np.array(probes, np.int64)
+        present = np.isin(probes, keys.astype(np.int64))
+        v, f = T.search_reference(tree, jnp.asarray(probes.astype(np.int32)))
+        assert np.array_equal(np.asarray(f), present)
+
+    def test_subtree_extraction_consistent(self, small_tree):
+        tree, keys, values = small_tree
+        split = 3
+        kv = dict(zip(keys.tolist(), values.tolist()))
+        for s in range(1 << split):
+            sub = tree.subtree(split, s)
+            sk = np.asarray(sub.keys)
+            real = sk[sk != T.SENTINEL_KEY]
+            # every subtree key must be found in the subtree itself
+            v, f = T.subtree_search(
+                sub.keys, sub.values, sub.height, jnp.asarray(real),
+                jnp.ones(real.shape, bool),
+            )
+            assert bool(np.all(np.asarray(f)))
+            for k, vv in zip(real.tolist(), np.asarray(v).tolist()):
+                assert kv[k] == vv
+
+    def test_register_route_matches_subtrees(self, small_tree):
+        tree, keys, _ = small_tree
+        split = 3
+        dest, val, found = T.register_layer_route(tree, jnp.asarray(keys), split)
+        dest = np.asarray(dest)
+        found = np.asarray(found)
+        # routed keys must actually live in the subtree they were routed to
+        for s in range(1 << split):
+            sub = tree.subtree(split, s)
+            sk = set(np.asarray(sub.keys).tolist()) - {int(T.SENTINEL_KEY)}
+            routed = keys[(dest == s) & ~found]
+            assert set(routed.tolist()) <= sk
+
+    def test_build_rejects_duplicates(self):
+        with pytest.raises(ValueError):
+            T.build_tree(np.array([1, 1, 2]), np.array([0, 1, 2]))

@@ -1,0 +1,89 @@
+"""Bulk insert/delete (the paper's announced extension, DESIGN.md §2)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tree as T
+from repro.core.engine import BSTEngine, PAPER_CONFIGS, EngineConfig
+from repro.core.updates import bulk_delete, bulk_insert, sorted_view
+from repro.data.keysets import make_tree_data
+
+
+def _probe(tree, kv):
+    keys = np.array(sorted(kv), np.int32)
+    v, f = T.search_reference(tree, jnp.asarray(keys))
+    assert bool(np.all(np.asarray(f)))
+    for k, vv in zip(keys.tolist(), np.asarray(v).tolist()):
+        assert kv[k] == vv
+
+
+def test_bulk_insert_upsert_and_layout():
+    keys, values = make_tree_data(500, seed=0)
+    tree = T.build_tree(keys, values)
+    kv = dict(zip(keys.tolist(), values.tolist()))
+    # new keys (odd: absent) + overwrites of existing ones
+    nk = np.array([3, 5, 7, int(keys[0]), int(keys[10])], np.int32)
+    nv = np.array([30, 50, 70, 999, 888], np.int32)
+    tree2 = bulk_insert(tree, nk, nv)
+    kv.update(dict(zip(nk.tolist(), nv.tolist())))
+    _probe(tree2, kv)
+    # layout invariant: in-order == sorted
+    sk, _ = sorted_view(tree2)
+    assert np.all(np.diff(sk) > 0)
+
+
+def test_bulk_delete_then_search():
+    keys, values = make_tree_data(300, seed=1)
+    tree = T.build_tree(keys, values)
+    kv = dict(zip(keys.tolist(), values.tolist()))
+    drop = keys[::7]
+    tree2 = bulk_delete(tree, drop)
+    for k in drop:
+        kv.pop(int(k))
+    _probe(tree2, kv)
+    v, f = T.search_reference(tree2, jnp.asarray(drop.astype(np.int32)))
+    assert not np.any(np.asarray(f))
+
+
+@given(
+    st.integers(5, 300),
+    st.lists(st.tuples(st.integers(0, 10**6), st.integers(0, 10**6)),
+             min_size=1, max_size=80),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_update_stream_property(n0, updates, seed):
+    """Random insert/delete stream == python-dict oracle."""
+    keys, values = make_tree_data(n0, seed=seed % 997)
+    tree = T.build_tree(keys, values)
+    oracle = dict(zip(keys.tolist(), values.tolist()))
+    ins = np.array([(k * 2 + 1) % (2**30) for k, _ in updates], np.int32)
+    vals = np.array([v % (2**30) for _, v in updates], np.int32)
+    tree = bulk_insert(tree, ins, vals)
+    for k, v in zip(ins.tolist(), vals.tolist()):
+        oracle[k] = v  # upsert; duplicate batch keys resolved last-wins by
+    # numpy stable unique in bulk_insert keeps LAST occurrence
+    dup = {}
+    for k, v in zip(ins.tolist(), vals.tolist()):
+        dup[k] = v
+    oracle.update(dup)
+    _probe(tree, oracle)
+    # delete half of the inserted keys
+    drop = ins[::2]
+    tree = bulk_delete(tree, drop)
+    for k in np.unique(drop).tolist():
+        oracle.pop(k, None)
+    if oracle:
+        _probe(tree, oracle)
+
+
+def test_engine_serves_updated_tree():
+    """Snapshot-swap serving: engines rebuild from an updated tree."""
+    keys, values = make_tree_data(1000, seed=2)
+    eng = BSTEngine(keys, values, PAPER_CONFIGS["Hyb8q"])
+    tree2 = bulk_insert(eng.tree, np.array([1], np.int32), np.array([42], np.int32))
+    sk, sv = sorted_view(tree2)
+    eng2 = BSTEngine(sk, sv, PAPER_CONFIGS["Hyb8q"])
+    v, f = eng2.lookup(np.array([1], np.int32))
+    assert bool(f[0]) and int(v[0]) == 42
