@@ -3,10 +3,17 @@
 This is the TPU-native performance plane (jit'd JAX); on the CPU container
 it measures real executed work, demonstrating the throughput ordering the
 partitioning strategies produce outside the cycle model.
+
+Rows come in two flavours per strategy: the jnp reference path and (for the
+``random`` key set, at a smaller batch) the Pallas forest-kernel path
+(``use_kernel=True``), so the bench trajectory tracks the kernel the TPU
+actually runs and not just the oracle.  Interpret-mode kernel timings
+measure executed semantics on CPU, not TPU performance (DESIGN.md §2).
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import List
 
 import numpy as np
@@ -16,7 +23,7 @@ from repro.core.engine import BSTEngine, PAPER_CONFIGS
 from repro.data.keysets import make_key_sets, make_tree_data
 
 
-def run(n_keys=(1 << 16) - 1, batch=16384) -> List[Row]:
+def run(n_keys=(1 << 16) - 1, batch=16384, kernel_batch=2048) -> List[Row]:
     # batch sized so the direct-mapped engines (whose stateless dispatch is
     # deliberately faithful-but-slow on CPU; see DESIGN.md §2) finish in
     # seconds -- keys/s is batch-size stable for the others.
@@ -34,4 +41,22 @@ def run(n_keys=(1 << 16) - 1, batch=16384) -> List[Row]:
                     derived=f"keys_per_sec={batch / (us / 1e6):.3e};batch={batch}",
                 )
             )
+
+    # Pallas forest-kernel path (interpret mode): smaller batch, one key set,
+    # so the full matrix stays tractable on CPU while still exercising the
+    # exact kernel datapath every strategy lowers to.
+    kq = sets["random"][:kernel_batch]
+    for name, cfg in PAPER_CONFIGS.items():
+        eng = BSTEngine(keys, values, dataclasses.replace(cfg, use_kernel=True))
+        us = time_fn(eng.lookup, kq, warmup=1, iters=2)
+        rows.append(
+            Row(
+                name=f"engine/random/{name}/kernel",
+                us_per_call=us,
+                derived=(
+                    f"keys_per_sec={kernel_batch / (us / 1e6):.3e};"
+                    f"batch={kernel_batch};use_kernel=1"
+                ),
+            )
+        )
     return rows

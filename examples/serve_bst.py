@@ -2,12 +2,15 @@
 
     PYTHONPATH=src python examples/serve_bst.py [--requests 200000]
 
-This is the paper-kind end-to-end scenario (a throughput accelerator):
-a request stream is chunked, dispatched through the engine configured with
-each of the paper's strategies, and the achieved keys/second is reported.
-The distributed section demonstrates the multi-chip hybrid engine: the tree
-vertically partitioned over a (data, model) mesh, keys routed by the
-queue-mapped all_to_all (8 simulated devices).
+This is the paper-kind end-to-end scenario (a throughput accelerator): a
+request stream is submitted to ``serving.BSTServer``, which packs it into
+fixed-shape chunks, dispatches them through the engine configured with each
+of the paper's strategies, and accounts achieved keys/second (found counts
+accumulated per chunk).  A bulk insert/delete then swaps in a fresh
+immutable snapshot mid-service.  The distributed section demonstrates the
+multi-chip hybrid engine: the tree vertically partitioned over a
+(data, model) mesh, keys routed by the queue-mapped all_to_all (8 simulated
+devices).
 """
 
 import os
@@ -19,10 +22,12 @@ import time
 
 import jax
 import numpy as np
+from jax.sharding import Mesh
 
-from repro.core import BSTEngine, PAPER_CONFIGS, build_tree
+from repro.core import PAPER_CONFIGS, build_tree
 from repro.core.distributed import make_distributed_lookup, make_dup_lookup
 from repro.data.keysets import make_tree_data
+from repro.serving import BSTServer
 
 
 def main():
@@ -35,48 +40,58 @@ def main():
     keys, values = make_tree_data(args.tree_keys, seed=0)
     rng = np.random.default_rng(1)
     stream = rng.choice(keys, args.requests).astype(np.int32)
-    chunks = [
-        stream[i : i + args.chunk] for i in range(0, len(stream), args.chunk)
-    ]
-    if len(chunks[-1]) != args.chunk:
-        chunks[-1] = np.pad(chunks[-1], (0, args.chunk - len(chunks[-1])))
 
-    print(f"serving {args.requests} lookups in {len(chunks)} chunks of {args.chunk}")
+    print(f"serving {args.requests} lookups in chunks of {args.chunk}")
     print(f"{'impl':8s} {'keys/s':>12s} {'found':>10s} {'memory(nodes)':>14s}")
     for name, cfg in PAPER_CONFIGS.items():
-        eng = BSTEngine(keys, values, cfg)
-        eng.lookup(chunks[0])  # warm the jit cache
-        found = 0
-        t0 = time.perf_counter()
-        for c in chunks:
-            v, f = eng.lookup(c)
-        jax.block_until_ready(v)
-        dt = time.perf_counter() - t0
-        found = int(np.asarray(f).sum())
+        srv = BSTServer(keys, values, cfg, chunk_size=args.chunk)
+        srv.warmup()
+        srv.submit(stream)
+        srv.drain()
+        s = srv.stats
         print(
-            f"{name:8s} {args.requests / dt:12.0f} {found:10d} "
-            f"{eng.memory_nodes():14d}"
+            f"{name:8s} {s.keys_per_sec:12.0f} {s.found:10d} "
+            f"{srv.memory_nodes():14d}"
         )
+
+    # ---- snapshot swap: bulk updates land between chunk streams
+    srv = BSTServer(keys, values, PAPER_CONFIGS["Hyb8q"], chunk_size=args.chunk)
+    new_keys = np.arange(1, 2_001, 2, dtype=np.int32)  # odd keys: all absent
+    srv.apply_updates(
+        insert_keys=new_keys,
+        insert_values=new_keys * 10,
+        delete_keys=keys[:1000],
+    )
+    v, f = srv.lookup(new_keys)
+    dead_v, dead_f = srv.lookup(keys[:1000])
+    print(
+        f"\nsnapshot swap: inserted {new_keys.size} (found {int(f.sum())}), "
+        f"deleted 1000 (still found {int(dead_f.sum())}), "
+        f"{srv.stats.snapshot_swaps} swap(s)"
+    )
 
     # ---- multi-chip: vertical partitioning over the model axis
     print("\ndistributed hybrid engine (8 devices, 2x4 data x model mesh):")
-    mesh = jax.make_mesh(
-        (2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    mesh = Mesh(np.array(jax.devices()[:8]).reshape(2, 4), ("data", "model"))
     tree = build_tree(keys, values)
+    chunks = [
+        stream[i : i + args.chunk] for i in range(0, len(stream), args.chunk)
+    ][:8]
+    if len(chunks[-1]) != args.chunk:  # pad the final partial chunk (jit shape)
+        chunks[-1] = np.pad(chunks[-1], (0, args.chunk - len(chunks[-1])))
     with mesh:
         for label, maker in (
             ("vertical(all_to_all)", lambda: make_distributed_lookup(tree, mesh, "model")),
             ("duplicated(DP)", lambda: make_dup_lookup(tree, mesh, "data")),
         ):
             look = maker()
-            look(chunks[0])
+            jax.block_until_ready(look(chunks[0]))
             t0 = time.perf_counter()
-            for c in chunks[:8]:
+            for c in chunks:
                 v, f = look(c)
             jax.block_until_ready(v)
             dt = time.perf_counter() - t0
-            print(f"  {label:22s} {8 * args.chunk / dt:12.0f} keys/s")
+            print(f"  {label:22s} {len(chunks) * args.chunk / dt:12.0f} keys/s")
 
 
 if __name__ == "__main__":

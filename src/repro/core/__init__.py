@@ -16,6 +16,7 @@ from repro.core.buffers import (
 from repro.core.cyclesim import SimResult, run_paper_matrix, simulate
 from repro.core.distributed import make_distributed_lookup, make_dup_lookup
 from repro.core.engine import PAPER_CONFIGS, BSTEngine, EngineConfig
+from repro.core.plans import SearchPlan, execute_plan, make_plan
 from repro.core.tree import (
     SENTINEL_KEY,
     SENTINEL_VALUE,
@@ -32,14 +33,17 @@ __all__ = [
     "PAPER_CONFIGS",
     "SENTINEL_KEY",
     "SENTINEL_VALUE",
+    "SearchPlan",
     "SimResult",
     "TreeData",
     "build_tree",
     "combine_to_chunk",
     "direct_dispatch",
     "dispatch",
+    "execute_plan",
     "gather_from_buffers",
     "make_distributed_lookup",
+    "make_plan",
     "make_dup_lookup",
     "queue_dispatch",
     "run_paper_matrix",

@@ -20,11 +20,15 @@ Buffer capacity is the collective-bytes lever (§Perf): capacity == local
 batch is stall-free but sends B x M keys; smaller capacities send less and
 handle overflow with an extra "stall round", faithfully mirroring the
 paper's throughput/buffer-size trade-off.
+
+Every pipeline phase here (route / dispatch / descend / combine) is the
+SAME implementation the single-chip ``BSTEngine`` runs -- imported from
+``core/plans.py`` -- so this module only contributes the collectives and
+the sharding (DESIGN.md §4).
 """
 
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional, Tuple
 
@@ -33,7 +37,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import buffers as buf
+from repro.sharding.compat import shard_map
+
+from repro.core import plans as plans_lib
 from repro.core import tree as tree_lib
 from repro.core.tree import TreeData
 
@@ -63,6 +69,8 @@ def make_distributed_lookup(
     axis: str = "model",
     capacity: Optional[int] = None,
     stall_rounds: int = 1,
+    use_kernel: bool = False,
+    interpret: bool = True,
 ):
     """Build a jitted distributed lookup over ``axis``.
 
@@ -70,61 +78,49 @@ def make_distributed_lookup(
     the same sharding.  ``capacity`` is the per-(src,dst) buffer depth; None
     means stall-free (capacity = local batch).  ``stall_rounds`` extra rounds
     re-dispatch overflowed keys (paper: frontend stall while buffers drain).
+    ``use_kernel=True`` routes each chip's local subtree descent through the
+    forest-batched Pallas kernel.
     """
     M = mesh.shape[axis]
     sub_keys, sub_vals, split_level, sub_height = shard_subtrees(tree, mesh, axis)
-    reg_keys, reg_vals = tree.register_layer(max(split_level, 1))
-    reg_keys = jax.device_put(reg_keys, NamedSharding(mesh, P()))
-    reg_vals = jax.device_put(reg_vals, NamedSharding(mesh, P()))
-    reg_tree = TreeData(reg_keys, reg_vals, max(split_level, 1) - 1, int(reg_keys.shape[0]))
-
-    def _route_local(queries):
-        """Register-layer descent (replicated constants)."""
-        if split_level == 0:
-            B = queries.shape[0]
-            return (
-                jnp.zeros((B,), jnp.int32),
-                jnp.full((B,), tree_lib.SENTINEL_VALUE, jnp.int32),
-                jnp.zeros((B,), bool),
-            )
-        dest, val, found = tree_lib.register_layer_route(
-            TreeData(reg_keys, reg_vals, split_level - 1, int(reg_keys.shape[0])),
-            queries,
-            split_level,
-        )
-        return dest, val, found
+    reg_n = (1 << max(split_level, 1)) - 1
+    reg_keys = jax.device_put(tree.keys[:reg_n], NamedSharding(mesh, P()))
+    reg_vals = jax.device_put(tree.values[:reg_n], NamedSharding(mesh, P()))
 
     def _one_round(queries, dest, active, sub_k, sub_v, cap):
-        """dispatch -> all_to_all -> local subtree search -> all_to_all back."""
-        plan = buf.queue_dispatch(dest, M, cap, active=active)
-        send_q = buf.gather_from_buffers(queries, plan.buffers, fill_value=0)
-        send_live = plan.buffers >= 0
+        """dispatch -> all_to_all -> local subtree descent -> all_to_all back."""
+        dplan = plans_lib.dispatch_phase("queue", dest, M, cap, active=active)
+        send_q, send_live = plans_lib.gather_phase(queries, dplan)
         # (M, C): row d goes to chip d; receive row s = keys from chip s.
         recv_q = jax.lax.all_to_all(send_q, axis, 0, 0, tiled=False)
-        recv_live = jax.lax.all_to_all(send_live.astype(jnp.int32), axis, 0, 0, tiled=False)
-        flat_q = recv_q.reshape(-1)
-        flat_live = recv_live.reshape(-1) != 0
-        vals, found = tree_lib.subtree_search(
-            sub_k[0], sub_v[0], sub_height, flat_q, flat_live
+        recv_live = jax.lax.all_to_all(
+            send_live.astype(jnp.int32), axis, 0, 0, tiled=False
         )
-        back_v = jax.lax.all_to_all(vals.reshape(M, cap), axis, 0, 0, tiled=False)
+        vals, found = plans_lib.descend_phase(
+            sub_k,
+            sub_v,
+            sub_height,
+            recv_q.reshape(1, -1),
+            (recv_live.reshape(-1) != 0)[None, :],
+            use_kernel=use_kernel,
+            interpret=interpret,
+        )
+        back_v = jax.lax.all_to_all(vals[0].reshape(M, cap), axis, 0, 0, tiled=False)
         back_f = (
             jax.lax.all_to_all(
-                found.astype(jnp.int32).reshape(M, cap), axis, 0, 0, tiled=False
+                found[0].astype(jnp.int32).reshape(M, cap), axis, 0, 0, tiled=False
             )
             != 0
         )
-        B = queries.shape[0]
-        got_v = buf.combine_to_chunk(
-            back_v, plan.buffers, B, fill_value=tree_lib.SENTINEL_VALUE
-        )
-        got_f = buf.combine_to_chunk(back_f, plan.buffers, B, fill_value=False)
-        return got_v, got_f, plan.overflow
+        got_v, got_f = plans_lib.combine_phase(back_v, back_f, dplan, queries.shape[0])
+        return got_v, got_f, dplan.overflow
 
     def _lookup_local(queries, sub_k, sub_v):
         B = queries.shape[0]
         cap = capacity if capacity is not None else B
-        dest, val, found = _route_local(queries)
+        dest, val, found = plans_lib.route_phase(
+            reg_keys, reg_vals, queries, split_level
+        )
         active = ~found
         got_v, got_f, overflow = _one_round(queries, dest, active, sub_k, sub_v, cap)
         val = jnp.where(active & ~overflow, got_v, val)
@@ -139,12 +135,12 @@ def make_distributed_lookup(
         return val, found
 
     lookup = jax.jit(
-        jax.shard_map(
+        shard_map(
             _lookup_local,
             mesh=mesh,
             in_specs=(P(axis), P(axis, None), P(axis, None)),
             out_specs=(P(axis), P(axis)),
-            check_vma=False,
+            check=False,
         )
     )
 
@@ -164,18 +160,20 @@ def make_dup_lookup(tree: TreeData, mesh: Mesh, axis: str = "data"):
     """DupN as data parallelism: replicate the tree, shard the query stream."""
     keys = jax.device_put(tree.keys, NamedSharding(mesh, P()))
     vals = jax.device_put(tree.values, NamedSharding(mesh, P()))
-    rep = TreeData(keys, vals, tree.height, tree.n_real)
 
-    def _local(queries):
-        return tree_lib.search_reference(rep, queries)
+    def _local(queries, k, v):
+        vals_, found_ = plans_lib.descend_phase(
+            k[None, :], v[None, :], tree.height, queries[None, :]
+        )
+        return vals_[0], found_[0]
 
     lookup = jax.jit(
-        jax.shard_map(
+        shard_map(
             _local,
             mesh=mesh,
-            in_specs=P(axis),
+            in_specs=(P(axis), P(), P()),
             out_specs=(P(axis), P(axis)),
-            check_vma=False,
+            check=False,
         )
     )
 
@@ -183,7 +181,7 @@ def make_dup_lookup(tree: TreeData, mesh: Mesh, axis: str = "data"):
         queries = jax.device_put(
             jnp.asarray(queries, jnp.int32), NamedSharding(mesh, P(axis))
         )
-        return lookup(queries)
+        return lookup(queries, keys, vals)
 
     run.mesh = mesh
     return run

@@ -16,20 +16,24 @@ All strategies return bit-identical results (property-tested); they differ in
 memory layout, dispatch traffic and -- in the distributed engine -- collective
 pattern.  Functional equivalence is exactly the paper's situation: every
 implementation finds the same keys, only throughput differs.
+
+The engine itself is a thin driver: each strategy compiles to a
+``core.plans.SearchPlan`` whose phase implementations (route / dispatch /
+descend / combine) are shared verbatim with ``core/distributed.py``, and
+whose descent lowers to the single forest-batched Pallas kernel when
+``use_kernel=True`` (DESIGN.md §2, §4).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-import math
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import buffers as buf
+from repro.core import plans as plans_lib
 from repro.core import tree as tree_lib
 from repro.core.tree import TreeData
 
@@ -44,13 +48,11 @@ class EngineConfig:
     register_levels: Optional[int] = None  # default: log2(n_trees) for hyb
     # Buffer capacity per subtree as a multiple of the fair share B/n_trees.
     buffer_slack: float = 2.0
-    use_kernel: bool = False  # route descent through the Pallas kernel
+    use_kernel: bool = False  # route descent through the Pallas forest kernel
     interpret: bool = True  # Pallas interpret mode (CPU container)
 
     def resolved_register_levels(self) -> int:
-        if self.register_levels is not None:
-            return self.register_levels
-        return max(1, int(math.log2(max(self.n_trees, 2))))
+        return plans_lib.resolved_register_levels(self.n_trees, self.register_levels)
 
     @property
     def name(self) -> str:
@@ -80,33 +82,29 @@ class BSTEngine:
     def __init__(self, keys, values, config: EngineConfig = EngineConfig()):
         self.config = config
         self.tree = tree_lib.build_tree(np.asarray(keys), np.asarray(values))
-        self._prepare()
-        self._lookup = jax.jit(self._lookup_impl)
+        self._finalize()
+
+    @classmethod
+    def from_tree(cls, tree: TreeData, config: EngineConfig = EngineConfig()):
+        """Wrap an existing immutable snapshot (serving's bulk-update swap)."""
+        self = cls.__new__(cls)
+        self.config = config
+        self.tree = tree
+        self._finalize()
+        return self
 
     # ------------------------------------------------------------------ build
-    def _prepare(self) -> None:
-        cfg, t = self.config, self.tree
-        if cfg.strategy == "hyb":
-            r = cfg.resolved_register_levels()
-            if (1 << r) < cfg.n_trees:
-                raise ValueError(
-                    f"register_levels={r} exposes {1 << r} subtrees < n_trees={cfg.n_trees}"
-                )
-            if r > t.height:
-                raise ValueError("register layer deeper than the tree")
-            self.split_level = int(math.log2(cfg.n_trees))
-            if self.split_level != math.log2(cfg.n_trees):
-                raise ValueError("n_trees must be a power of two")
-            # Register layer = levels [0, split_level); subtrees hang below.
-            idx = tree_lib.all_subtree_gather_indices(t.height, self.split_level)
-            self.sub_keys = t.keys[jnp.asarray(idx)]  # (n_trees, sub_n)
-            self.sub_values = t.values[jnp.asarray(idx)]
-            self.sub_height = t.height - self.split_level
-        elif cfg.strategy == "dup":
-            if cfg.n_trees < 1:
-                raise ValueError("dup needs n_trees >= 1")
-        elif cfg.strategy != "hrz":
-            raise ValueError(f"unknown strategy {cfg.strategy!r}")
+    def _finalize(self) -> None:
+        cfg = self.config
+        self.plan = plans_lib.make_plan(
+            self.tree,
+            strategy=cfg.strategy,
+            n_trees=cfg.n_trees,
+            mapping=cfg.mapping,
+            register_levels=cfg.register_levels,
+            buffer_slack=cfg.buffer_slack,
+        )
+        self._lookup = jax.jit(self._lookup_impl)
 
     # ----------------------------------------------------------------- lookup
     def lookup(self, queries) -> Tuple[jax.Array, jax.Array]:
@@ -115,91 +113,14 @@ class BSTEngine:
         return self._lookup(queries)
 
     def _lookup_impl(self, queries: jax.Array):
-        cfg = self.config
-        if cfg.strategy == "hrz":
-            return self._search_whole(queries)
-        if cfg.strategy == "dup":
-            # n_trees replicas each take a contiguous slice of the chunk.
-            B = queries.shape[0]
-            n = cfg.n_trees
-            pad = (-B) % n
-            q = jnp.pad(queries, (0, pad)).reshape(n, -1)
-            vals, found = jax.vmap(self._search_whole)(q)
-            return vals.reshape(-1)[:B], found.reshape(-1)[:B]
-        return self._lookup_hybrid(queries)
-
-    def _search_whole(self, queries: jax.Array):
-        if self.config.use_kernel:
-            from repro.kernels import ops as kops
-
-            return kops.bst_search(
-                self.tree.keys,
-                self.tree.values,
-                queries,
-                height=self.tree.height,
-                interpret=self.config.interpret,
-            )
-        return tree_lib.search_reference(self.tree, queries)
-
-    def _lookup_hybrid(self, queries: jax.Array):
-        cfg, t = self.config, self.tree
-        B = queries.shape[0]
-        n = cfg.n_trees
-        # Phase 1: register layer (broadcast storage, no port limit).
-        dest, reg_val, reg_found = tree_lib.register_layer_route(
-            t, queries, self.split_level
+        return plans_lib.execute_plan(
+            self.plan,
+            queries,
+            use_kernel=self.config.use_kernel,
+            interpret=self.config.interpret,
         )
-        active = ~reg_found
-        # Phase 2: buffer dispatch (the paper's direct/queue mapping).
-        capacity = int(math.ceil(B / n * cfg.buffer_slack))
-        plan = buf.dispatch(cfg.mapping, dest, n, capacity, active=active)
-        per_sub_q = buf.gather_from_buffers(queries, plan.buffers, fill_value=0)
-        per_sub_active = plan.buffers >= 0
-        # Phase 3: per-subtree descent (vmapped over vertical partitions).
-        if cfg.use_kernel:
-            from repro.kernels import ops as kops
-
-            sub_vals, sub_found = jax.vmap(
-                lambda k, v, q, a: kops.bst_search(
-                    k,
-                    v,
-                    q,
-                    height=self.sub_height,
-                    active=a,
-                    interpret=cfg.interpret,
-                )
-            )(self.sub_keys, self.sub_values, per_sub_q, per_sub_active)
-        else:
-            sub_vals, sub_found = jax.vmap(
-                lambda k, v, q, a: tree_lib.subtree_search(
-                    k, v, self.sub_height, q, a
-                )
-            )(self.sub_keys, self.sub_values, per_sub_q, per_sub_active)
-        # Phase 4: combine.  Overflowed items (plan.overflow) retry through a
-        # stall round -- the software analogue of the frontend stall.
-        got_val = buf.combine_to_chunk(
-            sub_vals, plan.buffers, B, fill_value=tree_lib.SENTINEL_VALUE
-        )
-        got_found = buf.combine_to_chunk(sub_found, plan.buffers, B, fill_value=False)
-        val = jnp.where(reg_found, reg_val, got_val)
-        found = reg_found | got_found
-
-        def retry(args):
-            val, found = args
-            # Stall round: the overflowed minority re-descends the whole tree.
-            r_val, r_found = tree_lib.search_reference(t, queries)
-            val = jnp.where(plan.overflow, r_val, val)
-            found = jnp.where(plan.overflow, r_found, found)
-            return val, found
-
-        val, found = jax.lax.cond(
-            jnp.any(plan.overflow), retry, lambda a: a, (val, found)
-        )
-        return val, found
 
     # ------------------------------------------------------------- accounting
     def memory_nodes(self) -> int:
         """Stored nodes (the paper's Fig. 8 memory metric)."""
-        if self.config.strategy == "dup":
-            return self.tree.n_nodes * self.config.n_trees
-        return self.tree.n_nodes
+        return self.plan.memory_nodes()

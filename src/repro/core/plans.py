@@ -1,0 +1,295 @@
+"""SearchPlan: one strategy abstraction behind every search datapath.
+
+The paper's claim is a single compare-descend datapath *reconfigured* by
+partitioning strategy (horizontal / duplicated / hybrid).  This module is
+that datapath in software (DESIGN.md §4): a ``SearchPlan`` captures the
+strategy's static layout (flat forest operands, register layer, dispatch
+mapping) and the four pipeline phases
+
+    route_phase    -- register-layer descent, survivors get a subtree id
+    dispatch_phase -- direct-/queue-mapped buffer placement (paper §II.C.3)
+    descend_phase  -- forest-batched subtree descent (Pallas kernel or oracle)
+    combine_phase  -- scatter buffered results back into chunk order
+
+are plain functions shared by BOTH drivers: the single-chip ``BSTEngine``
+and the multi-chip ``all_to_all`` engine in ``core/distributed.py``.  The
+drivers differ only in what sits between the phases (nothing, or a pair of
+collectives) -- exactly the FPGA situation, where one datapath serves every
+BRAM partitioning.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import buffers as buf
+from repro.core import tree as tree_lib
+from repro.core.tree import TreeData
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchPlan:
+    """Static per-engine search configuration (built once, looked up often).
+
+    forest_keys/forest_values: (n_rows, m) flat level-major (sub)trees --
+    the single tree for hrz/dup (n_rows == 1), one row per vertical subtree
+    for hyb.  ``shared_tree`` marks dup's replication-without-copy: every
+    kernel grid row reads operand row 0.  ``split_level > 0`` enables the
+    register-layer route -> buffer dispatch pipeline (hyb); ``full_tree``
+    is the stall-round oracle for overflowed keys.
+    """
+
+    strategy: str  # hrz | dup | hyb
+    forest_keys: jax.Array
+    forest_values: jax.Array
+    forest_height: int
+    n_trees: int
+    shared_tree: bool
+    split_level: int = 0
+    mapping: str = "queue"  # direct | queue (hyb only)
+    buffer_slack: float = 2.0
+    reg_keys: Optional[jax.Array] = None
+    reg_values: Optional[jax.Array] = None
+    full_tree: Optional[TreeData] = None
+
+    def memory_nodes(self) -> int:
+        """Stored nodes (the paper's Fig. 8 memory metric)."""
+        rows, m = self.forest_keys.shape
+        if self.strategy == "dup":
+            return int(m) * self.n_trees
+        reg = 0 if self.reg_keys is None else int(self.reg_keys.shape[0])
+        return rows * int(m) + reg
+
+
+def resolved_register_levels(n_trees: int, register_levels: Optional[int]) -> int:
+    if register_levels is not None:
+        return register_levels
+    return max(1, int(math.log2(max(n_trees, 2))))
+
+
+def make_plan(
+    tree: TreeData,
+    *,
+    strategy: str,
+    n_trees: int = 1,
+    mapping: str = "queue",
+    register_levels: Optional[int] = None,
+    buffer_slack: float = 2.0,
+) -> SearchPlan:
+    """Build the strategy's SearchPlan from one immutable tree snapshot."""
+    if strategy == "hrz":
+        return SearchPlan(
+            strategy="hrz",
+            forest_keys=tree.keys[None, :],
+            forest_values=tree.values[None, :],
+            forest_height=tree.height,
+            n_trees=1,
+            shared_tree=False,
+        )
+    if strategy == "dup":
+        if n_trees < 1:
+            raise ValueError("dup needs n_trees >= 1")
+        return SearchPlan(
+            strategy="dup",
+            forest_keys=tree.keys[None, :],
+            forest_values=tree.values[None, :],
+            forest_height=tree.height,
+            n_trees=n_trees,
+            shared_tree=True,
+        )
+    if strategy != "hyb":
+        raise ValueError(f"unknown strategy {strategy!r}")
+
+    r = resolved_register_levels(n_trees, register_levels)
+    if (1 << r) < n_trees:
+        raise ValueError(
+            f"register_levels={r} exposes {1 << r} subtrees < n_trees={n_trees}"
+        )
+    if r > tree.height:
+        raise ValueError("register layer deeper than the tree")
+    split_level = int(math.log2(n_trees))
+    if (1 << split_level) != n_trees:
+        raise ValueError("n_trees must be a power of two")
+    # Register layer = levels [0, split_level); subtrees hang below.
+    idx = tree_lib.all_subtree_gather_indices(tree.height, split_level)
+    reg_n = (1 << max(split_level, 1)) - 1
+    return SearchPlan(
+        strategy="hyb",
+        forest_keys=tree.keys[jnp.asarray(idx)],
+        forest_values=tree.values[jnp.asarray(idx)],
+        forest_height=tree.height - split_level,
+        n_trees=n_trees,
+        shared_tree=False,
+        split_level=split_level,
+        mapping=mapping,
+        buffer_slack=buffer_slack,
+        reg_keys=tree.keys[:reg_n],
+        reg_values=tree.values[:reg_n],
+        full_tree=tree,
+    )
+
+
+# --------------------------------------------------------------------- phases
+def route_phase(
+    reg_keys: jax.Array,
+    reg_values: jax.Array,
+    queries: jax.Array,
+    split_level: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Register-layer descent -> (dest, value, found).
+
+    ``split_level == 0`` means no routing network: everything goes to
+    subtree 0 unresolved (the single-partition degenerate case).
+    """
+    B = queries.shape[0]
+    if split_level == 0:
+        return (
+            jnp.zeros((B,), jnp.int32),
+            jnp.full((B,), tree_lib.SENTINEL_VALUE, jnp.int32),
+            jnp.zeros((B,), bool),
+        )
+    reg_tree = TreeData(
+        reg_keys, reg_values, max(split_level - 1, 0), int(reg_keys.shape[0])
+    )
+    return tree_lib.register_layer_route(reg_tree, queries, split_level)
+
+
+def dispatch_phase(
+    mapping: str,
+    dest: jax.Array,
+    n_dest: int,
+    capacity: int,
+    active: Optional[jax.Array] = None,
+) -> buf.DispatchPlan:
+    """Buffer placement: the paper's direct/queue mapping networks."""
+    return buf.dispatch(mapping, dest, n_dest, capacity, active=active)
+
+
+def gather_phase(
+    items: jax.Array, dplan: buf.DispatchPlan, fill_value=0
+) -> Tuple[jax.Array, jax.Array]:
+    """Materialize the buffered items: (B,) -> ((n_dest, cap), live mask)."""
+    per_dest = buf.gather_from_buffers(items, dplan.buffers, fill_value=fill_value)
+    return per_dest, dplan.buffers >= 0
+
+
+def descend_phase(
+    forest_keys: jax.Array,
+    forest_values: jax.Array,
+    height: int,
+    queries: jax.Array,
+    active: Optional[jax.Array] = None,
+    *,
+    shared_tree: bool = False,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Forest-batched compare-descend: (n_trees, B) queries in one shot.
+
+    ``use_kernel=True`` lowers to the single forest ``pallas_call``;
+    otherwise the vmapped jnp oracle runs (bit-identical by property test).
+    Both paths live behind ``kernels.ops.bst_search_forest`` so the
+    forest-batching shape handling exists exactly once.
+    """
+    return kops.bst_search_forest(
+        forest_keys,
+        forest_values,
+        queries,
+        height=height,
+        active=active,
+        interpret=interpret,
+        shared_tree=shared_tree,
+        use_ref=not use_kernel,
+    )
+
+
+def combine_phase(
+    sub_values: jax.Array,
+    sub_found: jax.Array,
+    dplan: buf.DispatchPlan,
+    chunk_size: int,
+    reg_values: Optional[jax.Array] = None,
+    reg_found: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Scatter per-buffer results back to chunk order; merge register hits."""
+    got_v = buf.combine_to_chunk(
+        sub_values, dplan.buffers, chunk_size, fill_value=tree_lib.SENTINEL_VALUE
+    )
+    got_f = buf.combine_to_chunk(sub_found, dplan.buffers, chunk_size, fill_value=False)
+    if reg_found is None:
+        return got_v, got_f
+    return jnp.where(reg_found, reg_values, got_v), reg_found | got_f
+
+
+# -------------------------------------------------------------------- drivers
+def execute_plan(
+    plan: SearchPlan,
+    queries: jax.Array,
+    *,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """The single-chip driver: run a query chunk through the plan's phases."""
+    B = queries.shape[0]
+    if plan.strategy == "hrz":
+        val, found = descend_phase(
+            plan.forest_keys,
+            plan.forest_values,
+            plan.forest_height,
+            queries[None, :],
+            use_kernel=use_kernel,
+            interpret=interpret,
+        )
+        return val[0], found[0]
+
+    if plan.strategy == "dup":
+        # n_trees replicas each take a contiguous slice of the chunk.
+        n = plan.n_trees
+        pad = (-B) % n
+        q = jnp.pad(queries, (0, pad)).reshape(n, -1)
+        val, found = descend_phase(
+            plan.forest_keys,
+            plan.forest_values,
+            plan.forest_height,
+            q,
+            shared_tree=True,
+            use_kernel=use_kernel,
+            interpret=interpret,
+        )
+        return val.reshape(-1)[:B], found.reshape(-1)[:B]
+
+    # hyb: route -> dispatch -> descend -> combine (+ stall round).
+    dest, reg_val, reg_found = route_phase(
+        plan.reg_keys, plan.reg_values, queries, plan.split_level
+    )
+    active = ~reg_found
+    capacity = int(math.ceil(B / plan.n_trees * plan.buffer_slack))
+    dplan = dispatch_phase(plan.mapping, dest, plan.n_trees, capacity, active=active)
+    per_sub_q, per_sub_active = gather_phase(queries, dplan)
+    sub_vals, sub_found = descend_phase(
+        plan.forest_keys,
+        plan.forest_values,
+        plan.forest_height,
+        per_sub_q,
+        per_sub_active,
+        use_kernel=use_kernel,
+        interpret=interpret,
+    )
+    val, found = combine_phase(sub_vals, sub_found, dplan, B, reg_val, reg_found)
+
+    def retry(args):
+        # Stall round: the overflowed minority re-descends the whole tree --
+        # the software analogue of the frontend stall while buffers drain.
+        val, found = args
+        r_val, r_found = tree_lib.search_reference(plan.full_tree, queries)
+        val = jnp.where(dplan.overflow, r_val, val)
+        found = jnp.where(dplan.overflow, r_found, found)
+        return val, found
+
+    return jax.lax.cond(jnp.any(dplan.overflow), retry, lambda a: a, (val, found))

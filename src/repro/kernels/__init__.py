@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
-  bst_search       -- the paper's search pipeline (level-partitioned VMEM)
+  bst_search       -- the paper's search pipeline: forest-batched descent
+                      over one flat level-major tree operand (DESIGN.md §2)
   queue_dispatch   -- the paper's queue-mapped buffers (prefix-sum compaction)
   flash_attention  -- LM substrate hot-spot (32k prefill cells)
 

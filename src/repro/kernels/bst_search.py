@@ -1,28 +1,35 @@
-"""Pallas TPU kernel: pipelined BST descent over level-partitioned VMEM.
+"""Pallas TPU kernel: forest-batched BST descent over one flat tree operand.
 
 FPGA -> TPU mapping (DESIGN.md §2):
 
-* one BRAM partition per tree level  ->  one pallas operand per level, each
-  staged into VMEM as a whole block (BlockSpec covers the full level, the
-  index_map is constant so the block is resident across grid steps);
+* the BFS (Eytzinger) array *is* the level-major BRAM image: level ``l``
+  occupies the contiguous slice ``[2^l - 1, 2^{l+1} - 1)``, so ONE flat
+  operand per tree replaces the seed's one-operand-per-level layout and
+  makes trees of height >= 20 expressible (the per-level-operand kernel
+  needed ``2 * height`` operands and a fresh ``pallas_call`` per tree);
 * the register layer (top ``register_levels`` levels)  ->  a single small
   VMEM block that every query lane compares against simultaneously;
+* parallel subtrees / replicas  ->  a leading *forest* dimension.  The 2-D
+  grid ``(n_trees, query_chunks)`` lowers horizontal (``n_trees == 1``),
+  duplicated (``shared_tree=True``: every grid row reads tree row 0) and
+  hybrid (one row per vertical subtree) partitioning to the SAME kernel --
+  one ``pallas_call``, no ``vmap``-of-``pallas_call``;
 * dual-port keys/cycle  ->  a whole query *chunk* (``block_q`` lanes) does a
   compare-descend step per level, i.e. the level pipeline is unrolled across
   the vector unit instead of across clock cycles;
-* the grid dimension streams query chunks exactly like the FPGA streams key
-  chunks -- while chunk ``i`` is being compared, the DMA engine prefetches
-  chunk ``i+1`` (Pallas double-buffers input blocks automatically).
+* the query-chunk grid dimension streams chunks exactly like the FPGA
+  streams key chunks -- while chunk ``i`` is being compared, the DMA engine
+  prefetches chunk ``i+1`` (Pallas double-buffers input blocks).
 
-The descent's per-level gather (``level_keys[local_idx]``) is a 1-D dynamic
-gather within a VMEM-resident block -- the TPU analogue of a BRAM port read.
+The descent's per-level gather (``flat_keys[idx]``) is a 1-D dynamic gather
+within a VMEM-resident block -- the TPU analogue of a BRAM port read.
 Validated in interpret mode on CPU per the container's constraints.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,13 +38,11 @@ from jax.experimental import pallas as pl
 SENTINEL_VALUE = -1  # plain int: jnp scalars would be captured as consts
 
 
-def _descend_one_level(
-    q, idx, val, found, active, level_keys, level_vals, level_offset_
-):
-    """One compare-descend step against a single level block."""
-    local = jnp.clip(idx - level_offset_, 0, level_keys.shape[0] - 1)
-    nk = level_keys[local]
-    nv = level_vals[local]
+def _descend_one_level(q, idx, val, found, active, keys, vals):
+    """One compare-descend step; ``idx`` is the global BFS node index."""
+    safe = jnp.clip(idx, 0, keys.shape[0] - 1)
+    nk = keys[safe]
+    nv = vals[safe]
     hit = (nk == q) & ~found & active
     val = jnp.where(hit, nv, val)
     found = found | hit
@@ -46,47 +51,118 @@ def _descend_one_level(
     return idx, val, found
 
 
-def _bst_search_kernel(
-    *refs,
+def _forest_search_kernel(
+    reg_k_ref,
+    reg_v_ref,
+    flat_k_ref,
+    flat_v_ref,
+    q_ref,
+    act_ref,
+    val_ref,
+    found_ref,
+    *,
     register_levels: int,
     height: int,
 ):
-    """refs = [reg_k, reg_v, lvl_k[r..H], lvl_v[r..H] interleaved, q, active,
-    out_val, out_found]."""
-    n_deep = height + 1 - register_levels
-    reg_k_ref, reg_v_ref = refs[0], refs[1]
-    level_refs = refs[2 : 2 + 2 * n_deep]
-    q_ref = refs[2 + 2 * n_deep]
-    act_ref = refs[3 + 2 * n_deep]
-    val_ref = refs[4 + 2 * n_deep]
-    found_ref = refs[5 + 2 * n_deep]
-
-    q = q_ref[...]
-    active = act_ref[...] != 0
+    q = q_ref[0, :]
+    active = act_ref[0, :] != 0
     idx = jnp.zeros(q.shape, jnp.int32)
     val = jnp.full(q.shape, SENTINEL_VALUE, dtype=jnp.int32)
     found = jnp.zeros(q.shape, bool)
 
-    # --- register layer: levels [0, r) live in one broadcast block.
-    reg_k = reg_k_ref[...]
-    reg_v = reg_v_ref[...]
+    # --- register layer: levels [0, r) live in one small broadcast block
+    # (global BFS index == offset inside the register block there).
+    reg_k = reg_k_ref[0, :]
+    reg_v = reg_v_ref[0, :]
     for _l in range(register_levels):
-        # global BFS index == offset inside the register block for idx < 2^r-1
+        idx, val, found = _descend_one_level(q, idx, val, found, active, reg_k, reg_v)
+
+    # --- deep levels: gathers into the flat level-major tree ("BRAM") block.
+    flat_k = flat_k_ref[0, :]
+    flat_v = flat_v_ref[0, :]
+    for _l in range(register_levels, height + 1):
         idx, val, found = _descend_one_level(
-            q, idx, val, found, active, reg_k, reg_v, 0
+            q, idx, val, found, active, flat_k, flat_v
         )
 
-    # --- deep levels: one VMEM block ("BRAM partition") per level.
-    for j in range(n_deep):
-        l = register_levels + j
-        lk = level_refs[2 * j][...]
-        lv = level_refs[2 * j + 1][...]
-        idx, val, found = _descend_one_level(
-            q, idx, val, found, active, lk, lv, (1 << l) - 1
-        )
+    val_ref[0, :] = val
+    found_ref[0, :] = found.astype(jnp.int32)
 
-    val_ref[...] = val
-    found_ref[...] = found.astype(jnp.int32)
+
+def bst_search_forest_pallas(
+    forest_keys: jax.Array,
+    forest_values: jax.Array,
+    queries: jax.Array,
+    height: int,
+    active: Optional[jax.Array] = None,
+    register_levels: int = 3,
+    block_q: int = 512,
+    interpret: bool = True,
+    shared_tree: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Search a forest of BFS-layout perfect trees in ONE ``pallas_call``.
+
+    forest_keys/forest_values: (n_rows, n) flat level-major trees, where
+    ``n = 2^{height+1} - 1``.  queries/active: (n_trees, B).  With
+    ``shared_tree=True`` the operand has one row that every grid row reads
+    (duplicated partitioning -- replication without materialisation).
+    Returns (values, found), each (n_trees, B).
+    """
+    if forest_keys.ndim != 2 or queries.ndim != 2:
+        raise ValueError("forest operands and queries must be 2-D")
+    T, B = queries.shape
+    n = forest_keys.shape[1]
+    if n != (1 << (height + 1)) - 1:
+        raise ValueError(f"flat operand has {n} nodes, want 2^{height + 1}-1")
+    if not shared_tree and forest_keys.shape[0] != T:
+        raise ValueError("need one tree row per query row (or shared_tree=True)")
+    register_levels = max(1, min(register_levels, height + 1))
+    if active is None:
+        active = jnp.ones((T, B), bool)
+    pad = (-B) % block_q
+    qp = jnp.pad(queries, ((0, 0), (0, pad)))
+    ap = jnp.pad(active.astype(jnp.int32), ((0, 0), (0, pad)))
+    nq = qp.shape[1] // block_q
+
+    reg_n = (1 << register_levels) - 1
+    if shared_tree:
+        tree_map = lambda t, i: (0, 0)  # noqa: E731 -- every grid row reads row 0
+    else:
+        tree_map = lambda t, i: (t, 0)  # noqa: E731
+    chunk_map = lambda t, i: (t, i)  # noqa: E731
+
+    kernel = functools.partial(
+        _forest_search_kernel, register_levels=register_levels, height=height
+    )
+    out_val, out_found = pl.pallas_call(
+        kernel,
+        grid=(T, nq),
+        in_specs=[
+            pl.BlockSpec((1, reg_n), tree_map),
+            pl.BlockSpec((1, reg_n), tree_map),
+            pl.BlockSpec((1, n), tree_map),
+            pl.BlockSpec((1, n), tree_map),
+            pl.BlockSpec((1, block_q), chunk_map),
+            pl.BlockSpec((1, block_q), chunk_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q), chunk_map),
+            pl.BlockSpec((1, block_q), chunk_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(qp.shape, jnp.int32),
+            jax.ShapeDtypeStruct(qp.shape, jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        forest_keys[:, :reg_n],
+        forest_values[:, :reg_n],
+        forest_keys,
+        forest_values,
+        qp,
+        ap,
+    )
+    return out_val[:, :B], out_found[:, :B] != 0
 
 
 def bst_search_pallas(
@@ -99,54 +175,15 @@ def bst_search_pallas(
     block_q: int = 512,
     interpret: bool = True,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Search ``queries`` in a BFS-layout perfect tree of ``height``.
-
-    Returns (values, found).  The tree is split into a register block
-    (levels [0, register_levels)) plus one operand per deeper level.
-    """
-    B = queries.shape[0]
-    register_levels = min(register_levels, height + 1)
-    if active is None:
-        active = jnp.ones((B,), bool)
-    pad = (-B) % block_q
-    qp = jnp.pad(queries, (0, pad))
-    ap = jnp.pad(active.astype(jnp.int32), (0, pad))
-    nq = qp.shape[0] // block_q
-
-    reg_n = (1 << register_levels) - 1
-    inputs = [tree_keys[:reg_n], tree_values[:reg_n]]
-    in_specs = [
-        pl.BlockSpec((reg_n,), lambda i: (0,)),
-        pl.BlockSpec((reg_n,), lambda i: (0,)),
-    ]
-    for l in range(register_levels, height + 1):
-        o, s = (1 << l) - 1, 1 << l
-        inputs += [tree_keys[o : o + s], tree_values[o : o + s]]
-        in_specs += [
-            pl.BlockSpec((s,), lambda i: (0,)),
-            pl.BlockSpec((s,), lambda i: (0,)),
-        ]
-    inputs += [qp, ap]
-    in_specs += [
-        pl.BlockSpec((block_q,), lambda i: (i,)),
-        pl.BlockSpec((block_q,), lambda i: (i,)),
-    ]
-
-    kernel = functools.partial(
-        _bst_search_kernel, register_levels=register_levels, height=height
-    )
-    out_val, out_found = pl.pallas_call(
-        kernel,
-        grid=(nq,),
-        in_specs=in_specs,
-        out_specs=[
-            pl.BlockSpec((block_q,), lambda i: (i,)),
-            pl.BlockSpec((block_q,), lambda i: (i,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((qp.shape[0],), jnp.int32),
-            jax.ShapeDtypeStruct((qp.shape[0],), jnp.int32),
-        ],
+    """Single-tree convenience wrapper: a forest of one (n_trees == 1)."""
+    val, found = bst_search_forest_pallas(
+        tree_keys[None, :],
+        tree_values[None, :],
+        queries[None, :],
+        height,
+        active=None if active is None else active[None, :],
+        register_levels=register_levels,
+        block_q=block_q,
         interpret=interpret,
-    )(*inputs)
-    return out_val[:B], out_found[:B] != 0
+    )
+    return val[0], found[0]

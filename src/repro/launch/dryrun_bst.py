@@ -22,18 +22,20 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import tree as tree_lib  # noqa: E402
-from repro.core import buffers as buf  # noqa: E402
+from repro.core import plans as plans_lib  # noqa: E402
 from repro.launch import dryrun as DR  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.sharding.compat import shard_map  # noqa: E402
 
 PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
 
 
 def build_lookup_lowered(mesh, tree_nodes: int, chunk_per_device: int, capacity_frac: float):
-    """Lower the shard_map hybrid lookup with abstract tree/query operands."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    """Lower the shard_map hybrid lookup with abstract tree/query operands.
 
+    The pipeline is the SAME phase chain as engine/distributed (core/plans);
+    only the operands are abstract and the collectives explicit.
+    """
     M = mesh.shape["model"]
     split = int(math.log2(M))
     height = int(math.log2(tree_nodes + 1)) - 1
@@ -46,42 +48,36 @@ def build_lookup_lowered(mesh, tree_nodes: int, chunk_per_device: int, capacity_
     B_global = B_local * n_dev
     cap = max(1, int(B_local * capacity_frac))
 
-    reg_n = (1 << split) - 1
+    reg_n = (1 << max(split, 1)) - 1
     reg_keys = jnp.arange(1, reg_n + 1, dtype=jnp.int32)  # placeholder values
     reg_vals = jnp.arange(1, reg_n + 1, dtype=jnp.int32)
 
     def _local(queries, sub_k, sub_v):
-        # register-layer route (replicated constants)
-        t = tree_lib.TreeData(reg_keys, reg_vals, max(split, 1) - 1, reg_n)
-        dest, val, found = tree_lib.register_layer_route(t, queries, split)
-        active = ~found
-        plan = buf.queue_dispatch(dest, M, cap, active=active)
-        send_q = buf.gather_from_buffers(queries, plan.buffers, fill_value=0)
-        send_live = (plan.buffers >= 0).astype(jnp.int32)
+        dest, val, found = plans_lib.route_phase(reg_keys, reg_vals, queries, split)
+        dplan = plans_lib.dispatch_phase("queue", dest, M, cap, active=~found)
+        send_q, send_live = plans_lib.gather_phase(queries, dplan)
         recv_q = jax.lax.all_to_all(send_q, "model", 0, 0)
-        recv_live = jax.lax.all_to_all(send_live, "model", 0, 0) != 0
-        vals, fnd = tree_lib.subtree_search(
-            sub_k[0], sub_v[0], sub_h, recv_q.reshape(-1), recv_live.reshape(-1)
+        recv_live = jax.lax.all_to_all(send_live.astype(jnp.int32), "model", 0, 0) != 0
+        vals, fnd = plans_lib.descend_phase(
+            sub_k, sub_v, sub_h, recv_q.reshape(1, -1), recv_live.reshape(1, -1)
         )
-        back_v = jax.lax.all_to_all(vals.reshape(M, cap), "model", 0, 0)
+        back_v = jax.lax.all_to_all(vals[0].reshape(M, cap), "model", 0, 0)
         back_f = jax.lax.all_to_all(
-            fnd.astype(jnp.int32).reshape(M, cap), "model", 0, 0
+            fnd[0].astype(jnp.int32).reshape(M, cap), "model", 0, 0
         )
-        got_v = buf.combine_to_chunk(back_v, plan.buffers, B_local, fill_value=-1)
-        got_f = buf.combine_to_chunk(back_f != 0, plan.buffers, B_local, fill_value=False)
+        got_v, got_f = plans_lib.combine_phase(back_v, back_f != 0, dplan, B_local)
         return jnp.where(found, val, got_v), found | got_f
 
     axes = tuple(mesh.axis_names)
-    dp = tuple(a for a in axes if a != "model")
     from jax.sharding import PartitionSpec as P
 
     fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             _local,
             mesh=mesh,
             in_specs=(P(axes), P("model", None), P("model", None)),
             out_specs=(P(axes), P(axes)),
-            check_vma=False,
+            check=False,
         )
     )
     q = jax.ShapeDtypeStruct((B_global,), jnp.int32)

@@ -11,21 +11,17 @@ from __future__ import annotations
 
 import jax
 
+from repro.sharding.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())
     model = min(model, n)
-    return jax.make_mesh(
-        (n // model, model),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto),
-    )
+    return make_mesh((n // model, model), ("data", "model"))

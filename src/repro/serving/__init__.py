@@ -1,3 +1,10 @@
+from repro.serving.bst_server import BSTServer, ServerStats
 from repro.serving.serve_loop import make_serve_step, make_prefill_fn, greedy_generate
 
-__all__ = ["make_serve_step", "make_prefill_fn", "greedy_generate"]
+__all__ = [
+    "BSTServer",
+    "ServerStats",
+    "make_serve_step",
+    "make_prefill_fn",
+    "greedy_generate",
+]

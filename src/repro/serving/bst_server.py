@@ -1,0 +1,197 @@
+"""BSTServer: streaming request scheduler over immutable tree snapshots.
+
+The paper's deployment story (DESIGN.md §5): search streams are served at
+full throughput from an immutable snapshot while inserts/deletes accumulate;
+a bulk update builds a fresh perfect tree and the server swaps snapshots
+atomically between chunks.  This module is that loop, TPU-native:
+
+  * **chunk accumulation** -- requests of any size are queued and packed
+    into fixed ``chunk_size`` engine calls (the jit shape), padding only the
+    final partial chunk; per-request results are sliced back out, so padded
+    lanes never leak into answers or accounting;
+  * **pluggable engine config** -- any ``EngineConfig`` (strategy, mapping,
+    kernel/reference path) serves the same request API;
+  * **snapshot swap** -- ``apply_updates`` runs ``core.updates`` bulk
+    insert/delete on the current snapshot and installs a new engine; lookups
+    submitted before the swap but not yet drained see the new snapshot
+    (drain-before-swap if read-your-epoch consistency is required);
+  * **keys/sec accounting** -- per-chunk timing with ``block_until_ready``,
+    found counts accumulated per chunk (not just the final one).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import tree as tree_lib
+from repro.core import updates as updates_lib
+from repro.core.engine import BSTEngine, EngineConfig
+from repro.core.tree import TreeData
+
+
+@dataclasses.dataclass
+class ServerStats:
+    """Cumulative serving counters (reset with ``BSTServer.reset_stats``)."""
+
+    requests: int = 0  # submit() calls
+    submitted: int = 0  # keys accepted
+    served: int = 0  # keys answered
+    found: int = 0  # hits, accumulated per chunk
+    chunks: int = 0  # engine invocations
+    busy_s: float = 0.0  # time inside the engine (incl. padding lanes)
+    snapshot_swaps: int = 0
+
+    @property
+    def keys_per_sec(self) -> float:
+        return self.served / self.busy_s if self.busy_s > 0 else 0.0
+
+
+class BSTServer:
+    """Accumulate lookup requests, serve them in fixed-shape chunks.
+
+    Single-threaded by design: the FPGA frontend is one stream of key
+    chunks, and on TPU one jit shape amortises compilation.  Thread-safety
+    is the caller's concern (wrap submit/drain in a lock if shared).
+    """
+
+    def __init__(
+        self,
+        keys,
+        values,
+        config: EngineConfig = EngineConfig(),
+        chunk_size: int = 8192,
+    ):
+        if chunk_size < 1:
+            raise ValueError("chunk_size must be positive")
+        self.config = config
+        self.chunk_size = chunk_size
+        self.stats = ServerStats()
+        self._pending: List[Tuple[int, np.ndarray]] = []
+        self._pending_keys = 0
+        self._next_ticket = 0
+        self._warmed = False
+        self._install(tree_lib.build_tree(np.asarray(keys), np.asarray(values)))
+
+    # --------------------------------------------------------------- snapshot
+    def _install(self, tree: TreeData) -> None:
+        self._tree = tree
+        self._engine = BSTEngine.from_tree(tree, self.config)
+        if self._warmed:
+            # The fresh engine's jit closes over the new snapshot; re-warm so
+            # post-swap chunks (and keys/sec accounting) stay compile-free.
+            self.warmup()
+
+    @property
+    def snapshot(self) -> TreeData:
+        """The current immutable tree snapshot."""
+        return self._tree
+
+    @property
+    def engine(self) -> BSTEngine:
+        return self._engine
+
+    def warmup(self) -> None:
+        """Populate the jit cache so timing excludes compilation.
+
+        Once called, every snapshot swap re-warms the fresh engine too.
+        """
+        dummy = np.zeros(self.chunk_size, np.int32)
+        jax.block_until_ready(self._engine.lookup(dummy))
+        self._warmed = True
+
+    def apply_updates(
+        self,
+        insert_keys=None,
+        insert_values=None,
+        delete_keys=None,
+    ) -> TreeData:
+        """Bulk-maintain the store and swap in the fresh snapshot.
+
+        Deletes are applied before inserts, so an upsert of a just-deleted
+        key lands.  Returns the new snapshot.  Pending (undrained) requests
+        will be served from the new snapshot.
+        """
+        tree = self._tree
+        if delete_keys is not None and len(np.atleast_1d(delete_keys)):
+            tree = updates_lib.bulk_delete(tree, delete_keys)
+        if insert_keys is not None and len(np.atleast_1d(insert_keys)):
+            if insert_values is None:
+                raise ValueError("insert_keys needs insert_values")
+            tree = updates_lib.bulk_insert(tree, insert_keys, insert_values)
+        self._install(tree)
+        self.stats.snapshot_swaps += 1
+        return tree
+
+    # --------------------------------------------------------------- requests
+    def submit(self, request_keys) -> int:
+        """Queue a lookup request; returns a ticket redeemable at drain()."""
+        req = np.atleast_1d(np.asarray(request_keys, np.int32))
+        if req.ndim != 1:
+            raise ValueError("request_keys must be scalar or 1-D")
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append((ticket, req))
+        self._pending_keys += req.size
+        self.stats.requests += 1
+        self.stats.submitted += req.size
+        return ticket
+
+    def pending(self) -> int:
+        """Keys queued but not yet served."""
+        return self._pending_keys
+
+    def drain(self) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        """Serve every queued request; returns {ticket: (values, found)}.
+
+        The queue is packed into ``chunk_size`` engine calls; only the final
+        partial chunk is padded, and padded lanes are dropped before results
+        or accounting.
+        """
+        if not self._pending:
+            return {}
+        batch = list(self._pending)
+        self._pending = []
+        self._pending_keys = 0
+
+        stream = np.concatenate([req for _, req in batch])
+        B = stream.size
+        pad = (-B) % self.chunk_size
+        if pad:
+            stream = np.pad(stream, (0, pad))
+        vals = np.empty(stream.size, np.int32)
+        found = np.empty(stream.size, bool)
+        for lo in range(0, stream.size, self.chunk_size):
+            t0 = time.perf_counter()
+            v, f = self._engine.lookup(stream[lo : lo + self.chunk_size])
+            jax.block_until_ready((v, f))
+            self.stats.busy_s += time.perf_counter() - t0
+            self.stats.chunks += 1
+            vals[lo : lo + self.chunk_size] = np.asarray(v)
+            found[lo : lo + self.chunk_size] = np.asarray(f)
+
+        self.stats.served += B
+        self.stats.found += int(found[:B].sum())  # per chunk-run, real lanes only
+        out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        lo = 0
+        for ticket, req in batch:
+            hi = lo + req.size
+            out[ticket] = (vals[lo:hi], found[lo:hi])
+            lo = hi
+        return out
+
+    def lookup(self, request_keys) -> Tuple[np.ndarray, np.ndarray]:
+        """Synchronous convenience: submit one request and drain the queue."""
+        ticket = self.submit(request_keys)
+        return self.drain()[ticket]
+
+    # ------------------------------------------------------------- accounting
+    def reset_stats(self) -> None:
+        self.stats = ServerStats()
+
+    def memory_nodes(self) -> int:
+        return self._engine.memory_nodes()

@@ -202,13 +202,15 @@ def make_train_step(
 
     batch_spec = P(axes)  # batch dim sharded over every axis
     state_spec = P()  # replicated params/opt
+    from repro.sharding.compat import shard_map
+
     return jax.jit(
-        jax.shard_map(
+        shard_map(
             step_dp,
             mesh=mesh,
             in_specs=(state_spec, batch_spec, batch_spec, None),
             out_specs=(state_spec, P()),
-            check_vma=False,
+            check=False,
         ),
         donate_argnums=(0,) if donate else (),
     )

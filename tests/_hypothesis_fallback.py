@@ -1,0 +1,144 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+The tier-1 suite property-tests the BST layers with hypothesis, but the
+container must not grow new dependencies.  This shim implements the tiny
+subset the tests use -- ``given``, ``settings`` and the ``strategies``
+combinators ``integers`` / ``lists`` / ``tuples`` / ``sampled_from`` /
+``composite`` -- as a *deterministic* example generator: every strategy
+draws from a ``numpy`` RNG seeded by the test name and example index, so a
+failure reproduces bit-identically on every run and machine.
+
+``install()`` registers the shim under ``sys.modules['hypothesis']`` (and
+``hypothesis.strategies``); ``tests/conftest.py`` calls it only when the
+real library is missing, so environments that have hypothesis keep its full
+shrinking/coverage behaviour.
+"""
+
+from __future__ import annotations
+
+import sys
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 10
+_UNIQUE_ATTEMPTS = 50  # rejection-sampling budget per unique element
+
+
+class Strategy:
+    """A value generator: ``example(rng)`` draws one deterministic value."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng) -> object:
+        return self._sample(rng)
+
+
+def integers(min_value, max_value) -> Strategy:
+    return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def sampled_from(elements) -> Strategy:
+    seq = list(elements)
+    return Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+
+def tuples(*strategies) -> Strategy:
+    return Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def lists(elements, min_size=0, max_size=None, unique=False) -> Strategy:
+    if max_size is None:
+        max_size = min_size + 10
+
+    def sample(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        if not unique:
+            return [elements.example(rng) for _ in range(n)]
+        out, seen = [], set()
+        for _ in range(n):
+            for _attempt in range(_UNIQUE_ATTEMPTS):
+                v = elements.example(rng)
+                if v not in seen:
+                    seen.add(v)
+                    out.append(v)
+                    break
+        return out
+
+    return Strategy(sample)
+
+
+def composite(fn):
+    """``@st.composite`` -- ``fn(draw, *args)`` becomes a strategy factory."""
+
+    def builder(*args, **kwargs):
+        def sample(rng):
+            return fn(lambda strat: strat.example(rng), *args, **kwargs)
+
+        return Strategy(sample)
+
+    return builder
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Records max_examples on the function (either side of ``@given``)."""
+
+    def deco(fn):
+        cfg = getattr(fn, "_shim_settings", None)
+        if cfg is None:
+            fn._shim_settings = {"max_examples": max_examples}
+        else:
+            cfg["max_examples"] = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    """Run the test over deterministic examples of the given strategies."""
+
+    def deco(fn):
+        shim_settings = getattr(fn, "_shim_settings", {})
+        seed_base = zlib.crc32(fn.__qualname__.encode())
+
+        # NOTE: signature intentionally hides the strategy parameters so
+        # pytest does not mistake them for fixtures (hypothesis does the
+        # same); ``*args`` still forwards ``self`` for test methods.
+        def wrapper(*args, **kwargs):
+            n = wrapper._shim_settings.get("max_examples", DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = np.random.default_rng((seed_base + i) % 2**32)
+                drawn = [s.example(rng) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._shim_settings = dict(shim_settings)
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register the shim as ``hypothesis`` / ``hypothesis.strategies``."""
+    if "hypothesis" in sys.modules:
+        return
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.lists = lists
+    st_mod.tuples = tuples
+    st_mod.sampled_from = sampled_from
+    st_mod.composite = composite
+
+    hyp_mod = types.ModuleType("hypothesis")
+    hyp_mod.given = given
+    hyp_mod.settings = settings
+    hyp_mod.strategies = st_mod
+    hyp_mod.__is_deterministic_fallback__ = True
+
+    sys.modules["hypothesis"] = hyp_mod
+    sys.modules["hypothesis.strategies"] = st_mod

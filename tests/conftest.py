@@ -2,8 +2,22 @@
 see the real single-CPU device; only launch/dryrun.py (a separate process)
 forces 512 placeholder devices."""
 
+import importlib.util
+import os
+
 import numpy as np
 import pytest
+
+try:  # real hypothesis when available; deterministic fallback otherwise
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "_hypothesis_fallback",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_fallback.py"),
+    )
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    _mod.install()
 
 from repro.core import tree as tree_lib
 from repro.data.keysets import make_tree_data

@@ -24,6 +24,7 @@ def run_sub(body: str, devices: int = 8, timeout: int = 1200) -> str:
         sys.path.insert(0, {os.path.join(ROOT, 'src')!r})
         import numpy as np
         import jax, jax.numpy as jnp
+        from repro.sharding.compat import make_mesh
         """
     ) + textwrap.dedent(body)
     out = subprocess.run(
@@ -38,8 +39,7 @@ def test_distributed_bst_lookup_vertical_partitioning():
         from repro.core import tree as T
         from repro.core.distributed import make_distributed_lookup, make_dup_lookup
         from repro.data.keysets import make_tree_data
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         keys, values = make_tree_data(4000)
         tr = T.build_tree(keys, values)
         rng = np.random.default_rng(0)
@@ -65,8 +65,7 @@ def test_pjit_train_step_all_families_small_mesh():
         import dataclasses
         from repro.configs import smoke_config
         from repro.training.train_loop import TrainConfig, init_train_state, make_train_step
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         for arch in ("tinyllama_1p1b", "mixtral_8x7b", "mamba2_1p3b",
                      "hymba_1p5b", "seamless_m4t_medium", "internvl2_2b"):
             cfg = smoke_config(arch)
@@ -98,7 +97,7 @@ def test_dp_shard_map_compression_modes():
         from repro.configs import smoke_config
         from repro.data.pipeline import TokenPipeline
         from repro.training.train_loop import TrainConfig, init_train_state, make_train_step
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         cfg = smoke_config("tinyllama_1p1b")
         pipe = TokenPipeline(cfg.vocab_size, 16, 8, seed=3)
         losses = {}
@@ -135,8 +134,7 @@ def test_elastic_reshard_across_mesh_shapes():
         cfg = smoke_config("tinyllama_1p1b")
         tcfg = TrainConfig(peak_lr=1e-3, warmup_steps=1, total_steps=5)
         d = tempfile.mkdtemp()
-        mesh_a = jax.make_mesh((4, 2), ("data", "model"),
-                               axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh_a = make_mesh((4, 2), ("data", "model"))
         with mesh_a:
             state = reshard_state(init_train_state(cfg, tcfg, jax.random.key(0)), cfg, mesh_a)
             step = make_train_step(cfg, tcfg, mesh=mesh_a, mode="pjit", donate=False)
@@ -145,8 +143,7 @@ def test_elastic_reshard_across_mesh_shapes():
             state, m0 = step(state, toks, labs)
             save_checkpoint(d, 0, state)
         for shape, axes in (((2, 2), ("data", "model")), ((8,), ("data",))):
-            mesh_b = jax.make_mesh(shape, axes,
-                                   axis_types=(jax.sharding.AxisType.Auto,)*len(axes))
+            mesh_b = make_mesh(shape, axes)
             with mesh_b:
                 like = init_train_state(cfg, tcfg, jax.random.key(0))
                 restored, _, _ = restore_checkpoint(d, like)
@@ -173,8 +170,7 @@ def test_perf_sharding_variants_run_correctly():
         from repro.sharding import specs as SP
         from jax.sharding import NamedSharding, PartitionSpec as P
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         cfg = smoke_config("qwen3_1p7b")
         params = M.init_params(cfg, jax.random.key(0))
         B, S = 8, 16  # dp_only requires global_batch % device_count == 0
@@ -222,8 +218,7 @@ def test_dryrun_cell_smoke_8dev():
         from repro.configs import smoke_config
         from repro.models.config import SHAPES
         from repro.launch import dryrun as DR
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         cfg = smoke_config("qwen3_1p7b")
         cfg = dataclasses.replace(cfg, dtype="bfloat16", attention_impl="blockwise",
                                   remat=True, logit_chunk=16)

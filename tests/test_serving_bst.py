@@ -1,0 +1,99 @@
+"""BSTServer: chunk accumulation, accounting, snapshot-swap serving."""
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import tree as T
+from repro.core.engine import PAPER_CONFIGS, EngineConfig
+from repro.data.keysets import make_tree_data
+from repro.serving import BSTServer
+
+
+def _reference(tree, queries):
+    v, f = T.search_reference(tree, jnp.asarray(np.asarray(queries, np.int32)))
+    return np.asarray(v), np.asarray(f)
+
+
+def test_chunk_accumulation_and_accounting():
+    keys, values = make_tree_data(1000, seed=7)
+    srv = BSTServer(keys, values, EngineConfig(strategy="hrz"), chunk_size=256)
+    rng = np.random.default_rng(0)
+    reqs = [
+        rng.choice(np.concatenate([keys, keys + 1]), size=n).astype(np.int32)
+        for n in (3, 256, 100, 517)  # odd sizes straddle chunk boundaries
+    ]
+    tickets = [srv.submit(r) for r in reqs]
+    assert srv.pending() == sum(r.size for r in reqs)
+    results = srv.drain()
+    assert srv.pending() == 0
+    total_found = 0
+    for t, r in zip(tickets, reqs):
+        v, f = results[t]
+        ref_v, ref_f = _reference(srv.snapshot, r)
+        np.testing.assert_array_equal(v, ref_v)
+        np.testing.assert_array_equal(f, ref_f)
+        total_found += int(ref_f.sum())
+    s = srv.stats
+    assert s.submitted == s.served == sum(r.size for r in reqs)
+    assert s.found == total_found  # accumulated per chunk, padding excluded
+    assert s.chunks == -(-sum(r.size for r in reqs) // 256)
+    assert s.requests == len(reqs)
+
+
+def test_scalar_and_empty_drain():
+    keys, values = make_tree_data(100, seed=1)
+    srv = BSTServer(keys, values, chunk_size=64)
+    assert srv.drain() == {}
+    v, f = srv.lookup(int(keys[5]))
+    assert bool(f[0]) and int(v[0]) == int(values[5])
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_CONFIGS))
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_snapshot_swap_every_strategy(name, use_kernel):
+    """bulk_insert/bulk_delete then lookups agree with search_reference
+    through every paper strategy, kernel and reference paths alike."""
+    keys, values = make_tree_data(500, seed=3)
+    cfg = dataclasses.replace(PAPER_CONFIGS[name], use_kernel=use_kernel)
+    srv = BSTServer(keys, values, cfg, chunk_size=128)
+
+    ins_k = np.array([1, 3, 5, 7, int(keys[0]), int(keys[42])], np.int32)
+    ins_v = np.array([10, 30, 50, 70, 999, 888], np.int32)
+    del_k = keys[10:20]
+    srv.apply_updates(insert_keys=ins_k, insert_values=ins_v, delete_keys=del_k)
+    assert srv.stats.snapshot_swaps == 1
+
+    rng = np.random.default_rng(4)
+    probes = np.concatenate(
+        [ins_k, del_k, rng.choice(np.concatenate([keys, keys + 1]), 300)]
+    ).astype(np.int32)
+    v, f = srv.lookup(probes)
+    ref_v, ref_f = _reference(srv.snapshot, probes)
+    np.testing.assert_array_equal(v, ref_v, err_msg=f"{name} kernel={use_kernel}")
+    np.testing.assert_array_equal(f, ref_f, err_msg=f"{name} kernel={use_kernel}")
+
+    # semantic spot-checks against the update stream itself
+    kv = dict(zip(keys.tolist(), values.tolist()))
+    for k in del_k.tolist():
+        kv.pop(k)
+    kv.update(dict(zip(ins_k.tolist(), ins_v.tolist())))
+    got = dict(zip(probes.tolist(), v.tolist()))
+    hit = dict(zip(probes.tolist(), f.tolist()))
+    for k in ins_k.tolist():
+        assert hit[k] and got[k] == kv[k]
+    for k in del_k.tolist():
+        assert not hit[k]
+
+
+def test_swap_applies_to_pending_requests():
+    """Requests drained after a swap see the new snapshot (documented)."""
+    keys, values = make_tree_data(300, seed=9)
+    srv = BSTServer(keys, values, chunk_size=64)
+    absent = np.array([1], np.int32)  # odd -> not in the seed tree
+    t = srv.submit(absent)
+    srv.apply_updates(insert_keys=absent, insert_values=np.array([42], np.int32))
+    v, f = srv.drain()[t]
+    assert bool(f[0]) and int(v[0]) == 42

@@ -122,7 +122,9 @@ def test_int8_compression_roundtrip_error_feedback():
     import jax
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("data",))
+    from repro.sharding.compat import make_mesh, shard_map
+
+    mesh = make_mesh((1,), ("data",))
     g = {"w": jnp.asarray([0.1, -0.01, 0.5, 0.003], jnp.float32)}
     ef = {"w": jnp.zeros((4,), jnp.float32)}
 
@@ -130,8 +132,8 @@ def test_int8_compression_roundtrip_error_feedback():
         return _compress_grads(g, ef, "int8", ("data",))
 
     out, new_ef = jax.jit(
-        jax.shard_map(run, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
-                      check_vma=False)
+        shard_map(run, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+                  check=False)
     )(g, ef)
     # dequantized + error ~= original
     np.testing.assert_allclose(
