@@ -1,14 +1,16 @@
-"""Real-engine throughput: keys/second on this host for every strategy.
+"""Real-engine throughput: keys/second on this host for every strategy x op.
 
 This is the TPU-native performance plane (jit'd JAX); on the CPU container
 it measures real executed work, demonstrating the throughput ordering the
 partitioning strategies produce outside the cycle model.
 
-Rows come in two flavours per strategy: the jnp reference path and (for the
-``random`` key set, at a smaller batch) the Pallas forest-kernel path
-(``use_kernel=True``), so the bench trajectory tracks the kernel the TPU
-actually runs and not just the oracle.  Interpret-mode kernel timings
-measure executed semantics on CPU, not TPU performance (DESIGN.md §2).
+Rows come in three flavours per strategy: the jnp reference path for plain
+lookups over every paper key set, the ordered-query ops (predecessor /
+range_count / range_scan -- DESIGN.md §6) on the ``random`` set, and (at a
+smaller batch) the Pallas forest-kernel path (``use_kernel=True``), so the
+bench trajectory tracks the kernel the TPU actually runs and not just the
+oracle.  Interpret-mode kernel timings measure executed semantics on CPU,
+not TPU performance (DESIGN.md §2).
 """
 
 from __future__ import annotations
@@ -21,6 +23,17 @@ import numpy as np
 from benchmarks.common import Row, time_fn
 from repro.core.engine import BSTEngine, PAPER_CONFIGS
 from repro.data.keysets import make_key_sets, make_tree_data
+
+# Ordered ops benchmarked per strategy (lookup is the baseline row family).
+ORDERED_OPS = ("predecessor", "range_count", "range_scan")
+
+
+def _time_op(eng: BSTEngine, op: str, q, q_hi, warmup=1, iters=3) -> float:
+    if q_hi is None:
+        return time_fn(lambda a: eng.query(op, a), q, warmup=warmup, iters=iters)
+    return time_fn(
+        lambda a, b: eng.query(op, a, b), q, q_hi, warmup=warmup, iters=iters
+    )
 
 
 def run(n_keys=(1 << 16) - 1, batch=16384, kernel_batch=2048) -> List[Row]:
@@ -42,16 +55,48 @@ def run(n_keys=(1 << 16) - 1, batch=16384, kernel_batch=2048) -> List[Row]:
                 )
             )
 
+    # Ordered-query ops (DESIGN.md §6) per strategy on the random set: one
+    # descent per op (range ops descend lo||hi), so keys/s is comparable to
+    # the lookup rows above.
+    rng = np.random.default_rng(3)
+    q = sets["random"]
+    span = rng.integers(0, 4 * n_keys // batch + 2, size=batch).astype(np.int32)
+    lo, hi = q, (q + span).astype(np.int32)
+    for op in ORDERED_OPS:
+        a, b = (lo, hi) if op.startswith("range") else (q, None)
+        for name, eng in engines.items():
+            us = _time_op(eng, op, a, b)
+            rows.append(
+                Row(
+                    name=f"engine/random/{name}/{op}",
+                    us_per_call=us,
+                    derived=f"keys_per_sec={batch / (us / 1e6):.3e};batch={batch}",
+                )
+            )
+
     # Pallas forest-kernel path (interpret mode): smaller batch, one key set,
     # so the full matrix stays tractable on CPU while still exercising the
-    # exact kernel datapath every strategy lowers to.
+    # exact kernel datapath every strategy lowers to.  One ordered op rides
+    # along per strategy (the same single pallas_call; see DESIGN.md §6).
     kq = sets["random"][:kernel_batch]
+    klo, khi = lo[:kernel_batch], hi[:kernel_batch]
     for name, cfg in PAPER_CONFIGS.items():
         eng = BSTEngine(keys, values, dataclasses.replace(cfg, use_kernel=True))
         us = time_fn(eng.lookup, kq, warmup=1, iters=2)
         rows.append(
             Row(
                 name=f"engine/random/{name}/kernel",
+                us_per_call=us,
+                derived=(
+                    f"keys_per_sec={kernel_batch / (us / 1e6):.3e};"
+                    f"batch={kernel_batch};use_kernel=1"
+                ),
+            )
+        )
+        us = _time_op(eng, "range_count", klo, khi, warmup=1, iters=2)
+        rows.append(
+            Row(
+                name=f"engine/random/{name}/range_count/kernel",
                 us_per_call=us,
                 derived=(
                     f"keys_per_sec={kernel_batch / (us / 1e6):.3e};"

@@ -4,7 +4,7 @@
   fig7  -- acceleration vs Hrz (paper Fig. 7): cycle-accurate reproduction
   fig8  -- memory/utilization vs Hrz (paper Fig. 8)
   fig9  -- timing/energy proxies (paper Fig. 9, modeled; see module doc)
-  engine-- real JAX engine throughput (keys/s) for all strategies
+  engine-- real JAX engine throughput (keys/s) for all strategies x query ops
   kernel-- Pallas kernels (interpret) vs jnp oracles
   moe   -- MoE dispatch drop rates: direct vs queue mapping
   roofline -- dry-run-derived three-term roofline per (arch x shape)
@@ -12,11 +12,14 @@
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 Subset : ``PYTHONPATH=src python -m benchmarks.run --only fig7,engine``
 Quick  : ``PYTHONPATH=src python -m benchmarks.run --quick``
+JSON   : add ``--json results.json`` to also dump the rows as a machine-
+         readable artifact (what CI uploads per run).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -25,6 +28,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma list of suites")
     ap.add_argument("--quick", action="store_true", help="small sizes (CI)")
+    ap.add_argument("--json", default=None, help="also write rows to this JSON file")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -58,14 +62,27 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    records = []
     for name in only:
         try:
             for row in suites[name]():
                 print(row.csv())
+                records.append(
+                    {
+                        "suite": name,
+                        "name": row.name,
+                        "us_per_call": row.us_per_call,
+                        "derived": row.derived,
+                    }
+                )
         except Exception as e:
             failures += 1
             print(f"{name},0.0,ERROR={type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"quick": args.quick, "rows": records}, f, indent=1)
+        print(f"wrote {len(records)} rows to {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(f"{failures} suite(s) failed")
 

@@ -1,10 +1,12 @@
-"""Quickstart: the BST accelerator's public API in 60 lines.
+"""Quickstart: the BST accelerator's public API in 80 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a key/value tree, runs lookups through every strategy of the paper
-(horizontal / duplicated / hybrid direct / hybrid queue), and reproduces the
-cycle-accurate throughput comparison on the paper's three key distributions.
+Builds a key/value tree, runs lookups AND ordered queries (predecessor /
+successor / range_count / range_scan, DESIGN.md §6) through every strategy
+of the paper (horizontal / duplicated / hybrid direct / hybrid queue), and
+reproduces the cycle-accurate throughput comparison on the paper's three
+key distributions.
 """
 
 import numpy as np
@@ -26,14 +28,28 @@ def main():
     vals, found = engine.lookup(queries)
     print(f"looked up {queries.size} keys: {int(found.sum())} found")
 
-    # 3) every strategy returns identical results -- only throughput differs
+    # 3) ordered queries ride the same single descent (DESIGN.md §6)
+    pk, pv, ok = engine.query("predecessor", queries)  # floor(q)
+    sk, sv, sok = engine.query("successor", queries)  # ceiling(q)
+    lo, hi = queries, (queries + 64).astype(np.int32)
+    counts = engine.query("range_count", lo, hi)  # |[lo, hi]|
+    rk, rv, taken = engine.query("range_scan", lo, hi, k=4)  # first 4 pairs
+    print(
+        f"ordered: {int(ok.sum())} predecessors, {int(sok.sum())} successors, "
+        f"mean range size {float(counts.mean()):.1f}, "
+        f"scanned {int(taken.sum())} pairs"
+    )
+
+    # 4) every strategy returns identical results -- only throughput differs
     for name, cfg in PAPER_CONFIGS.items():
         eng = BSTEngine(keys, values, cfg)
         v, f = eng.lookup(queries)
         assert np.array_equal(np.asarray(v), np.asarray(vals))
+        c = eng.query("range_count", lo, hi)
+        assert np.array_equal(np.asarray(c), np.asarray(counts))
         print(f"  {name:6s}: identical results, memory={eng.memory_nodes()} nodes")
 
-    # 4) the paper's evaluation: cycles to drain a key stream (Fig. 7)
+    # 5) the paper's evaluation: cycles to drain a key stream (Fig. 7)
     tree = build_tree(keys, values)
     sets = make_key_sets(tree, 16384)
     res = run_paper_matrix(tree, sets)

@@ -6,11 +6,13 @@ This is the paper-kind end-to-end scenario (a throughput accelerator): a
 request stream is submitted to ``serving.BSTServer``, which packs it into
 fixed-shape chunks, dispatches them through the engine configured with each
 of the paper's strategies, and accounts achieved keys/second (found counts
-accumulated per chunk).  A bulk insert/delete then swaps in a fresh
-immutable snapshot mid-service.  The distributed section demonstrates the
-multi-chip hybrid engine: the tree vertically partitioned over a
+accumulated per chunk).  An ordered-workload mix (predecessor / range_count
+/ range_scan request kinds, DESIGN.md §6) exercises the typed-request
+scheduler with per-op accounting.  A bulk insert/delete then swaps in a
+fresh immutable snapshot mid-service.  The distributed section demonstrates
+the multi-chip hybrid engine: the tree vertically partitioned over a
 (data, model) mesh, keys routed by the queue-mapped all_to_all (8 simulated
-devices).
+devices), serving the same ``query(op, ...)`` contract.
 """
 
 import os
@@ -25,7 +27,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import PAPER_CONFIGS, build_tree
-from repro.core.distributed import make_distributed_lookup, make_dup_lookup
+from repro.core.distributed import make_distributed_query, make_dup_query
 from repro.data.keysets import make_tree_data
 from repro.serving import BSTServer
 
@@ -54,6 +56,22 @@ def main():
             f"{srv.memory_nodes():14d}"
         )
 
+    # ---- ordered workload mix: typed request kinds, per-op accounting
+    srv = BSTServer(keys, values, PAPER_CONFIGS["Hyb8q"], chunk_size=args.chunk)
+    srv.warmup(("predecessor", "range_count", "range_scan"))
+    n_ord = max(args.chunk, args.requests // 8)
+    ord_keys = rng.choice(np.concatenate([keys, keys + 1]), n_ord).astype(np.int32)
+    lo = rng.choice(keys, n_ord).astype(np.int32)
+    hi = (lo + rng.integers(0, 64, n_ord)).astype(np.int32)
+    srv.submit(ord_keys, op="predecessor")
+    srv.submit_range(lo, hi, op="range_count")
+    srv.submit_range(lo, hi, op="range_scan")
+    srv.drain()
+    print("\nordered workload mix (Hyb8q):")
+    print(f"{'op':12s} {'served':>10s} {'chunks':>7s} {'keys/s':>12s}")
+    for op, st in srv.stats.per_op.items():
+        print(f"{op:12s} {st.served:10d} {st.chunks:7d} {st.keys_per_sec:12.0f}")
+
     # ---- snapshot swap: bulk updates land between chunk streams
     srv = BSTServer(keys, values, PAPER_CONFIGS["Hyb8q"], chunk_size=args.chunk)
     new_keys = np.arange(1, 2_001, 2, dtype=np.int32)  # odd keys: all absent
@@ -81,17 +99,20 @@ def main():
         chunks[-1] = np.pad(chunks[-1], (0, args.chunk - len(chunks[-1])))
     with mesh:
         for label, maker in (
-            ("vertical(all_to_all)", lambda: make_distributed_lookup(tree, mesh, "model")),
-            ("duplicated(DP)", lambda: make_dup_lookup(tree, mesh, "data")),
+            ("vertical(all_to_all)", lambda: make_distributed_query(tree, mesh, "model")),
+            ("duplicated(DP)", lambda: make_dup_query(tree, mesh, "data")),
         ):
-            look = maker()
-            jax.block_until_ready(look(chunks[0]))
+            query = maker()
+            jax.block_until_ready(query("lookup", chunks[0]))
             t0 = time.perf_counter()
             for c in chunks:
-                v, f = look(c)
+                v, f = query("lookup", c)
             jax.block_until_ready(v)
             dt = time.perf_counter() - t0
             print(f"  {label:22s} {len(chunks) * args.chunk / dt:12.0f} keys/s")
+            # the same handle serves ordered ops (predecessor shown)
+            pk, pv, ok = query("predecessor", chunks[0])
+            print(f"  {'':22s} predecessor ok for {int(np.asarray(ok).sum())} keys")
 
 
 if __name__ == "__main__":

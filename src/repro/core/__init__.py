@@ -14,15 +14,32 @@ from repro.core.buffers import (
     queue_dispatch,
 )
 from repro.core.cyclesim import SimResult, run_paper_matrix, simulate
-from repro.core.distributed import make_distributed_lookup, make_dup_lookup
+from repro.core.distributed import (
+    make_distributed_lookup,
+    make_distributed_query,
+    make_dup_lookup,
+    make_dup_query,
+)
 from repro.core.engine import PAPER_CONFIGS, BSTEngine, EngineConfig
-from repro.core.plans import SearchPlan, execute_plan, make_plan
+from repro.core.plans import (
+    QUERY_OPS,
+    RANGE_OPS,
+    SearchPlan,
+    execute_plan,
+    execute_plan_ordered,
+    make_plan,
+    ordered_query,
+)
 from repro.core.tree import (
+    NO_PRED_KEY,
+    NO_SUCC_KEY,
     SENTINEL_KEY,
     SENTINEL_VALUE,
+    OrderedResult,
     TreeData,
     build_tree,
     search_reference,
+    search_reference_ordered,
 )
 from repro.core.updates import bulk_delete, bulk_insert, sorted_view
 
@@ -30,7 +47,12 @@ __all__ = [
     "BSTEngine",
     "DispatchPlan",
     "EngineConfig",
+    "NO_PRED_KEY",
+    "NO_SUCC_KEY",
+    "OrderedResult",
     "PAPER_CONFIGS",
+    "QUERY_OPS",
+    "RANGE_OPS",
     "SENTINEL_KEY",
     "SENTINEL_VALUE",
     "SearchPlan",
@@ -41,12 +63,17 @@ __all__ = [
     "direct_dispatch",
     "dispatch",
     "execute_plan",
+    "execute_plan_ordered",
     "gather_from_buffers",
     "make_distributed_lookup",
+    "make_distributed_query",
     "make_plan",
     "make_dup_lookup",
+    "make_dup_query",
+    "ordered_query",
     "queue_dispatch",
     "run_paper_matrix",
     "search_reference",
+    "search_reference_ordered",
     "simulate",
 ]

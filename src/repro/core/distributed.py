@@ -25,6 +25,17 @@ Every pipeline phase here (route / dispatch / descend / combine) is the
 SAME implementation the single-chip ``BSTEngine`` runs -- imported from
 ``core/plans.py`` -- so this module only contributes the collectives and
 the sharding (DESIGN.md §4).
+
+The entry point is ``make_distributed_query`` -- the same ``query(op, ...)``
+contract as ``BSTEngine.query`` (DESIGN.md §6): the ordered descent runs
+sharded (the full ``OrderedResult`` rides the return ``all_to_all`` as one
+packed collective), so ONE compiled program serves every op -- lookups here
+deliberately share the ordered datapath (+5 int32 lanes of return payload)
+rather than compile a second membership-only program per mesh.  The per-op
+epilogues are the plans-layer functions, and
+range_scan's sorted-view gather reads the host snapshot (the bounded ``k``
+columns are tiny next to the descent traffic).  ``make_distributed_lookup``
+and ``make_dup_lookup`` remain as membership shorthands.
 """
 
 from __future__ import annotations
@@ -63,6 +74,162 @@ def shard_subtrees(
     return sub_keys, sub_vals, split_level, tree.height - split_level
 
 
+def _pack_ordered(res: plans_lib.OrderedResult, M: int, cap: int) -> jax.Array:
+    """Stack a (1, M*cap) OrderedResult into one (M, cap, F) int32 image.
+
+    The whole ordered payload rides the return routing network as ONE
+    ``all_to_all`` instead of a collective per field.
+    """
+    return jnp.stack(
+        [f[0].astype(jnp.int32).reshape(M, cap) for f in res], axis=-1
+    )
+
+
+def _unpack_ordered(packed: jax.Array) -> plans_lib.OrderedResult:
+    # NamedTuple order on both sides keeps pack/unpack structurally tied.
+    fields = tuple(packed[..., i] for i in range(packed.shape[-1]))
+    res = plans_lib.OrderedResult(*fields)
+    return res._replace(found=res.found != 0)
+
+
+def _make_query_runner(descend, tree: TreeData, rank_to_bfs: jax.Array):
+    """Wrap a sharded ordered-descent into the ``run(op, ...)`` contract.
+
+    One implementation of the op dispatch (operand validation, lo||hi
+    concat/split, per-op epilogues from core/plans) shared by the
+    all_to_all and data-parallel engines, so the contract cannot drift
+    between them or from ``BSTEngine.query``.
+    """
+
+    def run(op: str, queries, queries_hi=None, *, k: int = 8):
+        plans_lib.validate_op(op, queries_hi is not None)
+        if op in plans_lib.RANGE_OPS:
+            lo = jnp.asarray(queries, jnp.int32)
+            hi = jnp.asarray(queries_hi, jnp.int32)
+            B = lo.shape[0]
+            res = descend(jnp.concatenate([lo, hi]))
+            r_lo = plans_lib.OrderedResult(*(f[:B] for f in res))
+            r_hi = plans_lib.OrderedResult(*(f[B:] for f in res))
+            return plans_lib.range_epilogue(op, tree, rank_to_bfs, r_lo, r_hi, k=k)
+        q = jnp.asarray(queries, jnp.int32)
+        return plans_lib.point_epilogue(op, q, descend(q))
+
+    return run
+
+
+def make_distributed_query(
+    tree: TreeData,
+    mesh: Mesh,
+    axis: str = "model",
+    capacity: Optional[int] = None,
+    stall_rounds: int = 1,
+    use_kernel: bool = False,
+    interpret: bool = True,
+):
+    """Build a jitted distributed ``query(op, ...)`` over ``axis``.
+
+    Returns ``run(op, queries, queries_hi=None, *, k=8)`` with the same
+    per-op contract as ``BSTEngine.query`` (DESIGN.md §6).  Query batches
+    are (B_global,) sharded over ``axis``; results come back with the same
+    sharding (range_scan's gathered columns are replicated host arrays).
+
+    ``capacity`` is the per-(src,dst) buffer depth; None means stall-free
+    (capacity = local batch).  ``stall_rounds`` extra rounds re-dispatch
+    overflowed keys (paper: frontend stall while buffers drain); keys still
+    pending afterwards ride one final stall-free drain round, so every
+    result is exact -- capacity/stall_rounds trade collective bytes for
+    rounds, never correctness.  ``use_kernel=True`` routes each chip's local
+    subtree descent through the forest-batched Pallas kernel.
+    """
+    M = mesh.shape[axis]
+    sub_keys, sub_vals, split_level, sub_height = shard_subtrees(tree, mesh, axis)
+    reg_n = (1 << max(split_level, 1)) - 1
+    reg_keys = jax.device_put(tree.keys[:reg_n], NamedSharding(mesh, P()))
+    reg_vals = jax.device_put(tree.values[:reg_n], NamedSharding(mesh, P()))
+    rank_to_bfs = jnp.asarray(tree_lib.rank_to_bfs_indices(tree.height))
+
+    def _one_round(queries, dest, active, sub_k, sub_v, cap):
+        """dispatch -> all_to_all -> local ordered descent -> all_to_all back."""
+        dplan = plans_lib.dispatch_phase("queue", dest, M, cap, active=active)
+        send_q, send_live = plans_lib.gather_phase(queries, dplan)
+        # (M, C): row d goes to chip d; receive row s = keys from chip s.
+        recv_q = jax.lax.all_to_all(send_q, axis, 0, 0, tiled=False)
+        recv_live = jax.lax.all_to_all(
+            send_live.astype(jnp.int32), axis, 0, 0, tiled=False
+        )
+        sub = plans_lib.descend_phase_ordered(
+            sub_k,
+            sub_v,
+            sub_height,
+            recv_q.reshape(1, -1),
+            (recv_live.reshape(-1) != 0)[None, :],
+            use_kernel=use_kernel,
+            interpret=interpret,
+        )
+        back = jax.lax.all_to_all(
+            _pack_ordered(sub, M, cap), axis, 0, 0, tiled=False
+        )
+        got = plans_lib.combine_phase_ordered(
+            _unpack_ordered(back), dplan, queries.shape[0]
+        )
+        return got, dplan.overflow
+
+    def _query_local(queries, sub_k, sub_v):
+        B = queries.shape[0]
+        cap = capacity if capacity is not None else B
+        dest, reg = plans_lib.route_phase_ordered(
+            reg_keys, reg_vals, queries, split_level, tree.height
+        )
+        acc = tree_lib.init_ordered(B)
+        pending = ~reg.found
+        # Stall rounds: overflowed keys re-enter, buffers now empty.
+        for _ in range(1 + (stall_rounds if capacity is not None else 0)):
+            got, overflow = _one_round(queries, dest, pending, sub_k, sub_v, cap)
+            acc = plans_lib.where_ordered(pending & ~overflow, got, acc)
+            pending = overflow
+        if capacity is not None:
+            # Final drain at capacity == local batch: queue mapping cannot
+            # overflow a depth-B buffer, so NO lane is left with a partial
+            # ordered result (ranks/floors must be exact, not best-effort --
+            # the FPGA frontend likewise stalls until every key is placed).
+            # Guarded by a mesh-wide any() so the full-size round only runs
+            # when some chip still has pending keys: that is what makes
+            # capacity/stall_rounds a real bytes-vs-rounds trade, the small
+            # rounds lowering the probability of ever paying this one.
+            def drain(args):
+                acc, pending = args
+                got, _ = _one_round(queries, dest, pending, sub_k, sub_v, B)
+                return plans_lib.where_ordered(pending, got, acc)
+
+            any_pending = (
+                jax.lax.pmax(pending.any().astype(jnp.int32), axis) > 0
+            )
+            acc = jax.lax.cond(any_pending, drain, lambda a: a[0], (acc, pending))
+        return tuple(plans_lib.merge_ordered(reg, acc))
+
+    ordered = jax.jit(
+        shard_map(
+            _query_local,
+            mesh=mesh,
+            in_specs=(P(axis), P(axis, None), P(axis, None)),
+            out_specs=tuple([P(axis)] * 7),
+            check=False,
+        )
+    )
+
+    def _descend(queries: np.ndarray) -> plans_lib.OrderedResult:
+        q = jax.device_put(
+            jnp.asarray(queries, jnp.int32), NamedSharding(mesh, P(axis))
+        )
+        return plans_lib.OrderedResult(*ordered(q, sub_keys, sub_vals))
+
+    run = _make_query_runner(_descend, tree, rank_to_bfs)
+    run.mesh = mesh
+    run.capacity = capacity
+    run.split_level = split_level
+    return run
+
+
 def make_distributed_lookup(
     tree: TreeData,
     mesh: Mesh,
@@ -72,116 +239,72 @@ def make_distributed_lookup(
     use_kernel: bool = False,
     interpret: bool = True,
 ):
-    """Build a jitted distributed lookup over ``axis``.
-
-    queries: (B_global,) sharded over ``axis``; returns (values, found) with
-    the same sharding.  ``capacity`` is the per-(src,dst) buffer depth; None
-    means stall-free (capacity = local batch).  ``stall_rounds`` extra rounds
-    re-dispatch overflowed keys (paper: frontend stall while buffers drain).
-    ``use_kernel=True`` routes each chip's local subtree descent through the
-    forest-batched Pallas kernel.
-    """
-    M = mesh.shape[axis]
-    sub_keys, sub_vals, split_level, sub_height = shard_subtrees(tree, mesh, axis)
-    reg_n = (1 << max(split_level, 1)) - 1
-    reg_keys = jax.device_put(tree.keys[:reg_n], NamedSharding(mesh, P()))
-    reg_vals = jax.device_put(tree.values[:reg_n], NamedSharding(mesh, P()))
-
-    def _one_round(queries, dest, active, sub_k, sub_v, cap):
-        """dispatch -> all_to_all -> local subtree descent -> all_to_all back."""
-        dplan = plans_lib.dispatch_phase("queue", dest, M, cap, active=active)
-        send_q, send_live = plans_lib.gather_phase(queries, dplan)
-        # (M, C): row d goes to chip d; receive row s = keys from chip s.
-        recv_q = jax.lax.all_to_all(send_q, axis, 0, 0, tiled=False)
-        recv_live = jax.lax.all_to_all(
-            send_live.astype(jnp.int32), axis, 0, 0, tiled=False
-        )
-        vals, found = plans_lib.descend_phase(
-            sub_k,
-            sub_v,
-            sub_height,
-            recv_q.reshape(1, -1),
-            (recv_live.reshape(-1) != 0)[None, :],
-            use_kernel=use_kernel,
-            interpret=interpret,
-        )
-        back_v = jax.lax.all_to_all(vals[0].reshape(M, cap), axis, 0, 0, tiled=False)
-        back_f = (
-            jax.lax.all_to_all(
-                found[0].astype(jnp.int32).reshape(M, cap), axis, 0, 0, tiled=False
-            )
-            != 0
-        )
-        got_v, got_f = plans_lib.combine_phase(back_v, back_f, dplan, queries.shape[0])
-        return got_v, got_f, dplan.overflow
-
-    def _lookup_local(queries, sub_k, sub_v):
-        B = queries.shape[0]
-        cap = capacity if capacity is not None else B
-        dest, val, found = plans_lib.route_phase(
-            reg_keys, reg_vals, queries, split_level
-        )
-        active = ~found
-        got_v, got_f, overflow = _one_round(queries, dest, active, sub_k, sub_v, cap)
-        val = jnp.where(active & ~overflow, got_v, val)
-        found = found | got_f
-        # Stall rounds: overflowed keys re-enter, buffers now empty.
-        for _ in range(stall_rounds if capacity is not None else 0):
-            got_v, got_f, overflow = _one_round(
-                queries, dest, overflow, sub_k, sub_v, cap
-            )
-            val = jnp.where(got_f, got_v, val)
-            found = found | got_f
-        return val, found
-
-    lookup = jax.jit(
-        shard_map(
-            _lookup_local,
-            mesh=mesh,
-            in_specs=(P(axis), P(axis, None), P(axis, None)),
-            out_specs=(P(axis), P(axis)),
-            check=False,
-        )
+    """Membership shorthand over ``make_distributed_query`` (kept API)."""
+    query = make_distributed_query(
+        tree,
+        mesh,
+        axis=axis,
+        capacity=capacity,
+        stall_rounds=stall_rounds,
+        use_kernel=use_kernel,
+        interpret=interpret,
     )
 
     def run(queries: jax.Array):
-        queries = jax.device_put(
-            jnp.asarray(queries, jnp.int32), NamedSharding(mesh, P(axis))
-        )
-        return lookup(queries, sub_keys, sub_vals)
+        return query("lookup", queries)
 
-    run.mesh = mesh
-    run.capacity = capacity
-    run.split_level = split_level
+    run.mesh = query.mesh
+    run.capacity = query.capacity
+    run.split_level = query.split_level
+    run.query = query
     return run
 
 
-def make_dup_lookup(tree: TreeData, mesh: Mesh, axis: str = "data"):
-    """DupN as data parallelism: replicate the tree, shard the query stream."""
+def make_dup_query(tree: TreeData, mesh: Mesh, axis: str = "data"):
+    """DupN as data parallelism: replicate the tree, shard the query stream.
+
+    Returns the same ``run(op, ...)`` contract as ``make_distributed_query``
+    -- each replica group runs the full ordered descent on its slice, so
+    every op is embarrassingly parallel here.
+    """
     keys = jax.device_put(tree.keys, NamedSharding(mesh, P()))
     vals = jax.device_put(tree.values, NamedSharding(mesh, P()))
+    rank_to_bfs = jnp.asarray(tree_lib.rank_to_bfs_indices(tree.height))
 
     def _local(queries, k, v):
-        vals_, found_ = plans_lib.descend_phase(
+        res = plans_lib.descend_phase_ordered(
             k[None, :], v[None, :], tree.height, queries[None, :]
         )
-        return vals_[0], found_[0]
+        return tuple(f[0] for f in res)
 
-    lookup = jax.jit(
+    ordered = jax.jit(
         shard_map(
             _local,
             mesh=mesh,
             in_specs=(P(axis), P(), P()),
-            out_specs=(P(axis), P(axis)),
+            out_specs=tuple([P(axis)] * 7),
             check=False,
         )
     )
 
-    def run(queries: jax.Array):
-        queries = jax.device_put(
+    def _descend(queries) -> plans_lib.OrderedResult:
+        q = jax.device_put(
             jnp.asarray(queries, jnp.int32), NamedSharding(mesh, P(axis))
         )
-        return lookup(queries, keys, vals)
+        return plans_lib.OrderedResult(*ordered(q, keys, vals))
 
+    run = _make_query_runner(_descend, tree, rank_to_bfs)
     run.mesh = mesh
+    return run
+
+
+def make_dup_lookup(tree: TreeData, mesh: Mesh, axis: str = "data"):
+    """Membership shorthand over ``make_dup_query`` (kept API)."""
+    query = make_dup_query(tree, mesh, axis=axis)
+
+    def run(queries: jax.Array):
+        return query("lookup", queries)
+
+    run.mesh = query.mesh
+    run.query = query
     return run

@@ -1,4 +1,4 @@
-"""BSTEngine: the TPU-native lookup engine with the paper's four strategies.
+"""BSTEngine: the TPU-native query engine with the paper's three strategies.
 
 Strategies (paper §II):
   * ``hrz``   -- horizontal partitioning.  One tree, level-major layout, the
@@ -22,12 +22,18 @@ The engine itself is a thin driver: each strategy compiles to a
 descend / combine) are shared verbatim with ``core/distributed.py``, and
 whose descent lowers to the single forest-batched Pallas kernel when
 ``use_kernel=True`` (DESIGN.md §2, §4).
+
+The entry point is ``query(op, ...)`` -- one API for the whole ordered-query
+workload family (DESIGN.md §6): ``lookup``, ``predecessor``, ``successor``,
+``range_count`` and ``range_scan`` all lower through the same plan phases
+and the same kernel; ``lookup()`` remains as the membership shorthand.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import functools
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -104,21 +110,48 @@ class BSTEngine:
             register_levels=cfg.register_levels,
             buffer_slack=cfg.buffer_slack,
         )
-        self._lookup = jax.jit(self._lookup_impl)
+        self._query_cache: Dict[Tuple[str, int], callable] = {}
+
+    # ------------------------------------------------------------------ query
+    def query(self, op: str, queries, queries_hi=None, *, k: int = 8):
+        """Run one query op over a 1-D int32 batch (DESIGN.md §6).
+
+        * ``query("lookup", q)``            -> (values, found)
+        * ``query("predecessor", q)``       -> (keys, values, ok): floor(q)
+        * ``query("successor", q)``         -> (keys, values, ok): ceiling(q)
+        * ``query("range_count", lo, hi)``  -> counts of keys in [lo, hi]
+        * ``query("range_scan", lo, hi, k=8)`` -> (keys (B, k), values,
+          counts): the first ``k`` in-order pairs per range.
+
+        One jitted function per (op, k) -- every op runs the same plan
+        phases and the single forest-batched descent.
+        """
+        plans_lib.validate_op(op, queries_hi is not None)
+        # k shapes only range_scan's epilogue; other ops share one cache slot
+        # so varying k cannot trigger redundant retraces.
+        key = (op, k) if op == "range_scan" else (op, None)
+        fn = self._query_cache.get(key)
+        if fn is None:
+            fn = jax.jit(
+                functools.partial(
+                    plans_lib.ordered_query,
+                    self.plan,
+                    op,
+                    k=k,
+                    use_kernel=self.config.use_kernel,
+                    interpret=self.config.interpret,
+                )
+            )
+            self._query_cache[key] = fn
+        queries = jnp.asarray(queries, dtype=jnp.int32)
+        if op in plans_lib.RANGE_OPS:
+            return fn(queries, jnp.asarray(queries_hi, dtype=jnp.int32))
+        return fn(queries)
 
     # ----------------------------------------------------------------- lookup
     def lookup(self, queries) -> Tuple[jax.Array, jax.Array]:
         """(values, found) for a 1-D int32 query batch."""
-        queries = jnp.asarray(queries, dtype=jnp.int32)
-        return self._lookup(queries)
-
-    def _lookup_impl(self, queries: jax.Array):
-        return plans_lib.execute_plan(
-            self.plan,
-            queries,
-            use_kernel=self.config.use_kernel,
-            interpret=self.config.interpret,
-        )
+        return self.query("lookup", queries)
 
     # ------------------------------------------------------------- accounting
     def memory_nodes(self) -> int:

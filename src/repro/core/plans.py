@@ -4,7 +4,7 @@ The paper's claim is a single compare-descend datapath *reconfigured* by
 partitioning strategy (horizontal / duplicated / hybrid).  This module is
 that datapath in software (DESIGN.md §4): a ``SearchPlan`` captures the
 strategy's static layout (flat forest operands, register layer, dispatch
-mapping) and the four pipeline phases
+mapping) and the pipeline phases
 
     route_phase    -- register-layer descent, survivors get a subtree id
     dispatch_phase -- direct-/queue-mapped buffer placement (paper §II.C.3)
@@ -16,6 +16,14 @@ and the multi-chip ``all_to_all`` engine in ``core/distributed.py``.  The
 drivers differ only in what sits between the phases (nothing, or a pair of
 collectives) -- exactly the FPGA situation, where one datapath serves every
 BRAM partitioning.
+
+The datapath is ORDERED (DESIGN.md §6): every phase has an ``_ordered``
+variant carrying the full ``OrderedResult`` (exact match + strict
+predecessor/successor ancestors + rank boundary), and ``ordered_query``
+is the per-op contract every engine lowers through -- lookup, predecessor,
+successor, range_count and range_scan all ride the SAME single
+forest-batched ``pallas_call`` (range ops descend ``lo || hi`` in one
+concatenated pass and finish with rank arithmetic over the sorted view).
 """
 
 from __future__ import annotations
@@ -29,8 +37,22 @@ import jax.numpy as jnp
 
 from repro.core import buffers as buf
 from repro.core import tree as tree_lib
-from repro.core.tree import TreeData
+from repro.core.tree import OrderedResult, TreeData
 from repro.kernels import ops as kops
+
+# The per-op query contract (DESIGN.md §6).  Every op lowers through one
+# ordered forest descent; they differ only in operand count and epilogue.
+QUERY_OPS = ("lookup", "predecessor", "successor", "range_count", "range_scan")
+RANGE_OPS = ("range_count", "range_scan")
+
+
+def validate_op(op: str, has_hi: bool) -> None:
+    """One place for the op-name / operand-arity contract checks -- shared
+    by every query entry point (engine, distributed, plans)."""
+    if op not in QUERY_OPS:
+        raise ValueError(f"unknown op {op!r} (want one of {QUERY_OPS})")
+    if has_hi != (op in RANGE_OPS):
+        raise ValueError(f"op {op!r}: range ops take (lo, hi), others one batch")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,8 +63,10 @@ class SearchPlan:
     the single tree for hrz/dup (n_rows == 1), one row per vertical subtree
     for hyb.  ``shared_tree`` marks dup's replication-without-copy: every
     kernel grid row reads operand row 0.  ``split_level > 0`` enables the
-    register-layer route -> buffer dispatch pipeline (hyb); ``full_tree``
-    is the stall-round oracle for overflowed keys.
+    register-layer route -> buffer dispatch pipeline (hyb).  ``full_tree``
+    (every strategy) backs hyb's stall-round oracle and the ordered ops'
+    sorted-view gathers; ``rank_to_bfs`` maps in-order rank -> BFS index so
+    range_scan reads consecutive ranks straight out of the flat layout.
     """
 
     strategy: str  # hrz | dup | hyb
@@ -57,6 +81,7 @@ class SearchPlan:
     reg_keys: Optional[jax.Array] = None
     reg_values: Optional[jax.Array] = None
     full_tree: Optional[TreeData] = None
+    rank_to_bfs: Optional[jax.Array] = None
 
     def memory_nodes(self) -> int:
         """Stored nodes (the paper's Fig. 8 memory metric)."""
@@ -83,6 +108,7 @@ def make_plan(
     buffer_slack: float = 2.0,
 ) -> SearchPlan:
     """Build the strategy's SearchPlan from one immutable tree snapshot."""
+    rank_to_bfs = jnp.asarray(tree_lib.rank_to_bfs_indices(tree.height))
     if strategy == "hrz":
         return SearchPlan(
             strategy="hrz",
@@ -91,6 +117,8 @@ def make_plan(
             forest_height=tree.height,
             n_trees=1,
             shared_tree=False,
+            full_tree=tree,
+            rank_to_bfs=rank_to_bfs,
         )
     if strategy == "dup":
         if n_trees < 1:
@@ -102,6 +130,8 @@ def make_plan(
             forest_height=tree.height,
             n_trees=n_trees,
             shared_tree=True,
+            full_tree=tree,
+            rank_to_bfs=rank_to_bfs,
         )
     if strategy != "hyb":
         raise ValueError(f"unknown strategy {strategy!r}")
@@ -132,6 +162,7 @@ def make_plan(
         reg_keys=tree.keys[:reg_n],
         reg_values=tree.values[:reg_n],
         full_tree=tree,
+        rank_to_bfs=rank_to_bfs,
     )
 
 
@@ -158,6 +189,31 @@ def route_phase(
         reg_keys, reg_values, max(split_level - 1, 0), int(reg_keys.shape[0])
     )
     return tree_lib.register_layer_route(reg_tree, queries, split_level)
+
+
+def route_phase_ordered(
+    reg_keys: jax.Array,
+    reg_values: jax.Array,
+    queries: jax.Array,
+    split_level: int,
+    full_height: int,
+) -> Tuple[jax.Array, OrderedResult]:
+    """Ordered register-layer descent -> (dest, partial OrderedResult).
+
+    The partial result carries the register layer's predecessor/successor
+    candidates and its rank contribution (left-subtree sizes of the FULL
+    tree); the subtree descent below the split completes all three
+    (``merge_ordered``).
+    """
+    B = queries.shape[0]
+    if split_level == 0:
+        return jnp.zeros((B,), jnp.int32), tree_lib.init_ordered(B)
+    reg_tree = TreeData(
+        reg_keys, reg_values, max(split_level - 1, 0), int(reg_keys.shape[0])
+    )
+    return tree_lib.register_layer_route_ordered(
+        reg_tree, queries, split_level, full_height
+    )
 
 
 def dispatch_phase(
@@ -209,6 +265,36 @@ def descend_phase(
     )
 
 
+def descend_phase_ordered(
+    forest_keys: jax.Array,
+    forest_values: jax.Array,
+    height: int,
+    queries: jax.Array,
+    active: Optional[jax.Array] = None,
+    *,
+    shared_tree: bool = False,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> OrderedResult:
+    """Ordered forest-batched compare-descend (DESIGN.md §6).
+
+    Same single-``pallas_call`` lowering as ``descend_phase``; the extra
+    outputs (strict predecessor/successor ancestors, rank boundary) fall out
+    of the same pipelined descent.  Fields are (n_trees, B).
+    """
+    out = kops.bst_ordered_forest(
+        forest_keys,
+        forest_values,
+        queries,
+        height=height,
+        active=active,
+        interpret=interpret,
+        shared_tree=shared_tree,
+        use_ref=not use_kernel,
+    )
+    return OrderedResult(*out)
+
+
 def combine_phase(
     sub_values: jax.Array,
     sub_found: jax.Array,
@@ -227,7 +313,136 @@ def combine_phase(
     return jnp.where(reg_found, reg_values, got_v), reg_found | got_f
 
 
+def combine_phase_ordered(
+    sub: OrderedResult, dplan: buf.DispatchPlan, chunk_size: int
+) -> OrderedResult:
+    """Scatter per-buffer ordered results back to chunk order.
+
+    Unplaced lanes get each field's identity (no hit, no predecessor, no
+    successor, rank 0), so a later ``merge_ordered`` / stall-round override
+    composes cleanly.
+    """
+    fills = (
+        tree_lib.SENTINEL_VALUE,  # value
+        False,  # found
+        tree_lib.NO_PRED_KEY,
+        tree_lib.SENTINEL_VALUE,
+        tree_lib.NO_SUCC_KEY,
+        tree_lib.SENTINEL_VALUE,
+        0,  # rank
+    )
+    return OrderedResult(
+        *(
+            buf.combine_to_chunk(field, dplan.buffers, chunk_size, fill_value=fill)
+            for field, fill in zip(sub, fills)
+        )
+    )
+
+
+def merge_ordered(reg: OrderedResult, sub: OrderedResult) -> OrderedResult:
+    """Merge the register layer's partial result with the subtree descent.
+
+    The two are disjoint halves of one root-to-leaf path, so: exact hits are
+    exclusive; the predecessor is the deeper (larger) of the two right-turn
+    candidates and the successor the deeper (smaller) left-turn candidate
+    (absent candidates sit at the tracking identities, so plain max/min is
+    exact); ranks add (register turns count FULL-tree left subtrees, subtree
+    turns count local ones -- together the global rank, DESIGN.md §6).
+    """
+    take_sub_pred = sub.pred_key > reg.pred_key
+    take_sub_succ = sub.succ_key < reg.succ_key
+    return OrderedResult(
+        value=jnp.where(reg.found, reg.value, sub.value),
+        found=reg.found | sub.found,
+        pred_key=jnp.maximum(reg.pred_key, sub.pred_key),
+        pred_value=jnp.where(take_sub_pred, sub.pred_value, reg.pred_value),
+        succ_key=jnp.minimum(reg.succ_key, sub.succ_key),
+        succ_value=jnp.where(take_sub_succ, sub.succ_value, reg.succ_value),
+        rank=reg.rank + sub.rank,
+    )
+
+
+def where_ordered(
+    mask: jax.Array, a: OrderedResult, b: OrderedResult
+) -> OrderedResult:
+    """Per-lane select between two ordered results (stall-round override)."""
+    return OrderedResult(*(jnp.where(mask, x, y) for x, y in zip(a, b)))
+
+
 # -------------------------------------------------------------------- drivers
+def execute_plan_ordered(
+    plan: SearchPlan,
+    queries: jax.Array,
+    *,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> OrderedResult:
+    """The single-chip driver: one ordered pass through the plan's phases.
+
+    Returns the full per-query ``OrderedResult`` -- the common substrate
+    every query op's epilogue reads (``ordered_query``).  All strategies
+    descend through the one forest-batched kernel / oracle.
+    """
+    B = queries.shape[0]
+    if plan.strategy == "hrz":
+        res = descend_phase_ordered(
+            plan.forest_keys,
+            plan.forest_values,
+            plan.forest_height,
+            queries[None, :],
+            use_kernel=use_kernel,
+            interpret=interpret,
+        )
+        return OrderedResult(*(f[0] for f in res))
+
+    if plan.strategy == "dup":
+        # n_trees replicas each take a contiguous slice of the chunk.
+        n = plan.n_trees
+        pad = (-B) % n
+        q = jnp.pad(queries, (0, pad)).reshape(n, -1)
+        res = descend_phase_ordered(
+            plan.forest_keys,
+            plan.forest_values,
+            plan.forest_height,
+            q,
+            shared_tree=True,
+            use_kernel=use_kernel,
+            interpret=interpret,
+        )
+        return OrderedResult(*(f.reshape(-1)[:B] for f in res))
+
+    # hyb: route -> dispatch -> descend -> combine + merge (+ stall round).
+    dest, reg = route_phase_ordered(
+        plan.reg_keys,
+        plan.reg_values,
+        queries,
+        plan.split_level,
+        plan.full_tree.height,
+    )
+    active = ~reg.found
+    capacity = int(math.ceil(B / plan.n_trees * plan.buffer_slack))
+    dplan = dispatch_phase(plan.mapping, dest, plan.n_trees, capacity, active=active)
+    per_sub_q, per_sub_active = gather_phase(queries, dplan)
+    sub = descend_phase_ordered(
+        plan.forest_keys,
+        plan.forest_values,
+        plan.forest_height,
+        per_sub_q,
+        per_sub_active,
+        use_kernel=use_kernel,
+        interpret=interpret,
+    )
+    res = merge_ordered(reg, combine_phase_ordered(sub, dplan, B))
+
+    def retry(res):
+        # Stall round: the overflowed minority re-descends the whole tree --
+        # the software analogue of the frontend stall while buffers drain.
+        full = tree_lib.search_reference_ordered(plan.full_tree, queries)
+        return where_ordered(dplan.overflow, full, res)
+
+    return jax.lax.cond(jnp.any(dplan.overflow), retry, lambda r: r, res)
+
+
 def execute_plan(
     plan: SearchPlan,
     queries: jax.Array,
@@ -235,7 +450,11 @@ def execute_plan(
     use_kernel: bool = False,
     interpret: bool = True,
 ) -> Tuple[jax.Array, jax.Array]:
-    """The single-chip driver: run a query chunk through the plan's phases."""
+    """Membership lookup through the kernel's 2-output configuration.
+
+    Same phase chain as ``execute_plan_ordered`` but none of the ordered
+    tracking -- the hot lookup path pays nothing for the §6 datapath.
+    """
     B = queries.shape[0]
     if plan.strategy == "hrz":
         val, found = descend_phase(
@@ -249,7 +468,6 @@ def execute_plan(
         return val[0], found[0]
 
     if plan.strategy == "dup":
-        # n_trees replicas each take a contiguous slice of the chunk.
         n = plan.n_trees
         pad = (-B) % n
         q = jnp.pad(queries, (0, pad)).reshape(n, -1)
@@ -293,3 +511,103 @@ def execute_plan(
         return val, found
 
     return jax.lax.cond(jnp.any(dplan.overflow), retry, lambda a: a, (val, found))
+
+
+def ordered_query(
+    plan: SearchPlan,
+    op: str,
+    queries: jax.Array,
+    queries_hi: Optional[jax.Array] = None,
+    *,
+    k: int = 8,
+    use_kernel: bool = False,
+    interpret: bool = True,
+):
+    """The per-op query contract (DESIGN.md §6) -- one descent, one epilogue.
+
+    * ``lookup(q)``           -> (values, found)
+    * ``predecessor(q)``      -> (keys, values, ok): largest stored key <= q
+    * ``successor(q)``        -> (keys, values, ok): smallest stored key >= q
+    * ``range_count(lo, hi)`` -> counts of stored keys in [lo, hi]
+    * ``range_scan(lo, hi)``  -> (keys (B, k), values (B, k), counts): the
+      first ``k`` in-order pairs of [lo, hi], sentinel-padded past the end;
+      ``counts`` is clipped to ``k`` (the bounded-scan contract).
+
+    Range ops descend the concatenated ``lo || hi`` batch, so every op costs
+    exactly one forest ``pallas_call``; the epilogues are rank arithmetic
+    plus (for range_scan) a gather through the rank -> BFS map.  Keys and
+    bounds must be strictly inside (NO_PRED_KEY, SENTINEL_KEY); when ``ok``
+    is False the key output is NO_PRED_KEY / NO_SUCC_KEY and the value
+    SENTINEL_VALUE.
+    """
+    validate_op(op, queries_hi is not None)
+
+    if op == "lookup":
+        # The hot membership path: same phases, 2-output kernel config.
+        return execute_plan(
+            plan, queries, use_kernel=use_kernel, interpret=interpret
+        )
+
+    if op in RANGE_OPS:
+        lo, hi = queries, queries_hi
+        B = lo.shape[0]
+        res = execute_plan_ordered(
+            plan,
+            jnp.concatenate([lo, hi]),
+            use_kernel=use_kernel,
+            interpret=interpret,
+        )
+        r_lo = OrderedResult(*(f[:B] for f in res))
+        r_hi = OrderedResult(*(f[B:] for f in res))
+        return range_epilogue(
+            op, plan.full_tree, plan.rank_to_bfs, r_lo, r_hi, k=k
+        )
+
+    res = execute_plan_ordered(
+        plan, queries, use_kernel=use_kernel, interpret=interpret
+    )
+    return point_epilogue(op, queries, res)
+
+
+def point_epilogue(op: str, queries: jax.Array, res: OrderedResult):
+    """Per-lane epilogue of the single-batch ops (shared with distributed)."""
+    if op == "lookup":
+        return res.value, res.found
+    if op == "predecessor":
+        # floor(q): q itself on an exact hit, else the strict predecessor.
+        keys = jnp.where(res.found, queries, res.pred_key)
+        values = jnp.where(res.found, res.value, res.pred_value)
+        ok = res.found | (res.pred_key != tree_lib.NO_PRED_KEY)
+        return keys, values, ok
+    # successor: ceiling(q).
+    keys = jnp.where(res.found, queries, res.succ_key)
+    values = jnp.where(res.found, res.value, res.succ_value)
+    ok = res.found | (res.succ_key != tree_lib.NO_SUCC_KEY)
+    return keys, values, ok
+
+
+def range_epilogue(
+    op: str,
+    full_tree: TreeData,
+    rank_to_bfs: jax.Array,
+    r_lo: OrderedResult,
+    r_hi: OrderedResult,
+    *,
+    k: int = 8,
+):
+    """Rank arithmetic over the sorted view (shared with distributed).
+
+    |[lo, hi]| = rank_le(hi) - rank_lt(lo); empty ranges (lo > hi) clamp to
+    0.  range_scan gathers the first ``k`` ranks through the rank -> BFS
+    map, so the "sorted view" is read straight out of the flat layout.
+    """
+    counts = jnp.maximum(r_hi.rank + r_hi.found.astype(jnp.int32) - r_lo.rank, 0)
+    if op == "range_count":
+        return counts
+    take = jnp.minimum(counts, k)
+    ranks = r_lo.rank[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]
+    valid = jnp.arange(k, dtype=jnp.int32)[None, :] < take[:, None]
+    bfs = rank_to_bfs[jnp.clip(ranks, 0, full_tree.n_nodes - 1)]
+    keys = jnp.where(valid, full_tree.keys[bfs], tree_lib.SENTINEL_KEY)
+    values = jnp.where(valid, full_tree.values[bfs], tree_lib.SENTINEL_VALUE)
+    return keys, values, take

@@ -6,7 +6,8 @@ BRAM partition per level" is the BFS (a.k.a. Eytzinger) layout: node ``i``'s
 children are ``2i+1`` / ``2i+2`` and level ``l`` occupies the contiguous
 slice ``[2^l - 1, 2^{l+1} - 1)``.  Each descent step then touches exactly one
 contiguous region -- the property the FPGA design builds its level pipeline
-on, and the property our Pallas kernel's per-level VMEM blocks rely on.
+on, and the property that lets the forest-batched Pallas kernel keep each
+whole tree in ONE flat level-major VMEM operand (kernels/bst_search.py).
 
 We work with *perfect* trees (n = 2^{H+1} - 1 nodes); arbitrary sorted inputs
 are padded with a +inf sentinel, matching the paper's complete-tree setting
@@ -17,7 +18,7 @@ stream of infinite keys").
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +28,36 @@ import numpy as np
 # semantics intact for any real int32 key strictly below it.
 SENTINEL_KEY = np.int32(np.iinfo(np.int32).max)
 SENTINEL_VALUE = np.int32(-1)
+
+# Ordered-query sentinels (DESIGN.md §6): the descent tracks the last
+# right-turn ancestor (largest stored key < q) and last left-turn ancestor
+# (smallest stored key > q).  "No such ancestor" self-encodes as the identity
+# of the max/min tracking -- int32 min for predecessors, int32 max for
+# successors (the latter coincides with SENTINEL_KEY: a sentinel successor
+# IS "no real successor", since sentinels pad above every real key).
+NO_PRED_KEY = np.int32(np.iinfo(np.int32).min)
+NO_SUCC_KEY = SENTINEL_KEY
+
+
+class OrderedResult(NamedTuple):
+    """Per-query outputs of one ordered compare-descend pass (DESIGN.md §6).
+
+    value/found: the exact-match payload (SENTINEL_VALUE when absent).
+    pred_key/pred_value: deepest right-turn ancestor == largest stored key
+        strictly below the query (NO_PRED_KEY/SENTINEL_VALUE when none).
+    succ_key/succ_value: deepest left-turn ancestor == smallest stored key
+        strictly above the query (NO_SUCC_KEY/SENTINEL_VALUE when none).
+    rank: number of stored keys strictly below the query -- the rank
+        boundary that range_count / range_scan arithmetic builds on.
+    """
+
+    value: jax.Array
+    found: jax.Array
+    pred_key: jax.Array
+    pred_value: jax.Array
+    succ_key: jax.Array
+    succ_value: jax.Array
+    rank: jax.Array
 
 
 def level_offset(level: int) -> int:
@@ -187,6 +218,108 @@ def search_reference(tree: TreeData, queries: jax.Array) -> Tuple[jax.Array, jax
     return val, found
 
 
+def left_subtree_sizes(height: int) -> np.ndarray:
+    """Per-level left-subtree size ``2^{H-l} - 1`` of a height-``H`` tree.
+
+    The ordered descent's rank arithmetic: taking the right branch at level
+    ``l`` skips the node plus its entire left subtree -- ``2^{H-l}`` keys,
+    all real whenever the node itself is real (sentinels pad only the top
+    in-order ranks, so a real node's left subtree never contains one).
+    """
+    levels = np.arange(height + 1)
+    return ((1 << (height - levels)) - 1).astype(np.int32)
+
+
+def rank_to_bfs_indices(height: int) -> np.ndarray:
+    """BFS index of every in-order rank (the sorted view of the layout).
+
+    Inverts ``rank = (2p + 1) * 2^{H-l} - 1``: with ``t = rank + 1``, the
+    number of trailing zero bits of ``t`` is ``H - l`` and the remaining odd
+    factor is ``2p + 1``.  range_scan gathers consecutive ranks through this
+    map instead of re-sorting (DESIGN.md §6).
+    """
+    n = (1 << (height + 1)) - 1
+    t = np.arange(1, n + 1, dtype=np.int64)
+    z = np.log2(t & -t).astype(np.int64)  # trailing zeros, exact for 2^k
+    level = height - z
+    offset = ((t >> z) - 1) >> 1
+    return (((1 << level) - 1) + offset).astype(np.int32)
+
+
+def _ordered_step(keys, values, queries, active, idx_clamp):
+    """One ordered compare-descend scan step over BFS-layout operands.
+
+    The single implementation behind both tree-level jnp descents (full
+    reference, register-layer route); the independent twin lives in
+    ``kernels/ref.bst_ordered_ref`` (deliberately separate ground truth for
+    the kernel property tests).  ``idx_clamp`` bounds the child index for
+    full-tree descents; the register route leaves it None because the final
+    index must step past the register block to name the subtree.
+    """
+
+    def step(carry, left):
+        idx, r = carry
+        nk = keys[idx]
+        nv = values[idx]
+        live = ~r.found if active is None else active & ~r.found
+        hit = (nk == queries) & live
+        go_right = live & ~hit & (queries > nk)
+        go_left = live & ~hit & (queries < nk)
+        r = OrderedResult(
+            value=jnp.where(hit, nv, r.value),
+            found=r.found | hit,
+            pred_key=jnp.where(go_right, nk, r.pred_key),
+            pred_value=jnp.where(go_right, nv, r.pred_value),
+            succ_key=jnp.where(go_left, nk, r.succ_key),
+            succ_value=jnp.where(go_left, nv, r.succ_value),
+            rank=r.rank
+            + jnp.where(go_right, left + 1, 0)
+            + jnp.where(hit, left, 0),
+        )
+        nxt = 2 * idx + 1 + go_right.astype(idx.dtype)
+        if idx_clamp is not None:
+            nxt = jnp.minimum(nxt, idx_clamp)
+        frozen = r.found if active is None else r.found | ~active
+        idx = jnp.where(frozen, idx, nxt)
+        return (idx, r), None
+
+    return step
+
+
+def search_reference_ordered(
+    tree: TreeData, queries: jax.Array, active: jax.Array | None = None
+) -> OrderedResult:
+    """Pure-jnp oracle for the ordered descent (DESIGN.md §6).
+
+    One root-to-leaf pass per query yields the exact-match payload PLUS the
+    strict predecessor/successor ancestors and the query's rank boundary.
+    Bit-identical to the forest kernel's ordered outputs (property-tested).
+    Queries must be real keys, i.e. strictly inside
+    (NO_PRED_KEY, SENTINEL_KEY).
+    """
+    B = queries.shape[0]
+    if active is None:
+        active = jnp.ones((B,), dtype=bool)
+    left_sizes = jnp.asarray(left_subtree_sizes(tree.height))
+    step = _ordered_step(tree.keys, tree.values, queries, active, tree.n_nodes - 1)
+    init = (jnp.zeros((B,), jnp.int32), init_ordered(B))
+    (_, res), _ = jax.lax.scan(step, init, left_sizes)
+    return res
+
+
+def init_ordered(B: int) -> OrderedResult:
+    """The ordered descent's identity state (also the inactive-lane output)."""
+    return OrderedResult(
+        value=jnp.full((B,), SENTINEL_VALUE, jnp.int32),
+        found=jnp.zeros((B,), bool),
+        pred_key=jnp.full((B,), NO_PRED_KEY, jnp.int32),
+        pred_value=jnp.full((B,), SENTINEL_VALUE, jnp.int32),
+        succ_key=jnp.full((B,), NO_SUCC_KEY, jnp.int32),
+        succ_value=jnp.full((B,), SENTINEL_VALUE, jnp.int32),
+        rank=jnp.zeros((B,), jnp.int32),
+    )
+
+
 def register_layer_route(
     tree: TreeData, queries: jax.Array, register_levels: int
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -224,6 +357,30 @@ def register_layer_route(
     subtree_id = jnp.clip(idx - level_offset(register_levels), 0, None)
     subtree_id = jnp.where(found, -1, subtree_id).astype(jnp.int32)
     return subtree_id, val, found
+
+
+def register_layer_route_ordered(
+    tree: TreeData, queries: jax.Array, register_levels: int, full_height: int
+) -> Tuple[jax.Array, OrderedResult]:
+    """Ordered variant of ``register_layer_route`` (DESIGN.md §6).
+
+    Returns (subtree_id, partial OrderedResult): the register layer's
+    contribution to predecessor/successor tracking and rank arithmetic.
+    Rank contributions use ``full_height`` left-subtree sizes -- the register
+    layer is a prefix of the FULL tree, so a right turn at global level ``l``
+    skips ``2^{full_height - l}`` keys regardless of where the subtree split
+    sits.  The subtree descent's local rank then simply adds on.
+    """
+    if register_levels < 1:
+        raise ValueError("need at least one register level (the root)")
+    B = queries.shape[0]
+    left_sizes = jnp.asarray(left_subtree_sizes(full_height)[:register_levels])
+    step = _ordered_step(tree.keys, tree.values, queries, None, None)
+    init = (jnp.zeros((B,), jnp.int32), init_ordered(B))
+    (idx, res), _ = jax.lax.scan(step, init, left_sizes)
+    subtree_id = jnp.clip(idx - level_offset(register_levels), 0, None)
+    subtree_id = jnp.where(res.found, -1, subtree_id).astype(jnp.int32)
+    return subtree_id, res
 
 
 def subtree_search(

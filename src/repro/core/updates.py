@@ -13,11 +13,13 @@ The TPU-native rendition is BULK maintenance, the standard LSM-ish trade:
     CPU would do.
   * ``bulk_delete``: mask + compact + re-layout.
 
-Both return a fresh TreeData; the engine strategies (and the level-blocked
-Pallas kernel) consume the result unchanged, because every layout invariant
-is re-established by construction.  Throughput-wise this matches the
-paper's deployment story: search streams are served from immutable
-snapshots; updates land in batches between snapshot swaps.
+Both return a fresh TreeData; the engine strategies (and the forest-batched
+flat Pallas kernel) consume the result unchanged, because every layout
+invariant -- including the sorted in-order view that the ordered query ops'
+rank arithmetic reads (DESIGN.md §6) -- is re-established by construction.
+Throughput-wise this matches the paper's deployment story: search streams
+are served from immutable snapshots; updates land in batches between
+snapshot swaps.
 
 Duplicate-key policy: an inserted key that already exists REPLACES the
 stored value (upsert), matching map semantics used by the lookup tests.

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: forest-batched BST descent over one flat tree operand.
+"""Pallas TPU kernel: forest-batched ordered BST descent, one flat operand.
 
 FPGA -> TPU mapping (DESIGN.md §2):
 
@@ -21,6 +21,14 @@ FPGA -> TPU mapping (DESIGN.md §2):
   streams key chunks -- while chunk ``i`` is being compared, the DMA engine
   prefetches chunk ``i+1`` (Pallas double-buffers input blocks).
 
+The datapath is ORDERED (DESIGN.md §6): besides the exact-match payload,
+each compare-descend step tracks the last right-turn ancestor (the strict
+predecessor), the last left-turn ancestor (the strict successor) and the
+query's rank boundary -- all inside the same pipelined descent, which is
+what turns the membership accelerator into a range-query engine.  The
+paper's hit/miss search is the SAME kernel body unrolled in its 2-output
+configuration (``ordered=False``), so lookups pay none of the tracking.
+
 The descent's per-level gather (``flat_keys[idx]``) is a 1-D dynamic gather
 within a VMEM-resident block -- the TPU analogue of a BRAM port read.
 Validated in interpret mode on CPU per the container's constraints.
@@ -35,20 +43,41 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-SENTINEL_VALUE = -1  # plain int: jnp scalars would be captured as consts
+# Plain ints: jnp scalars would be captured as consts inside the kernel.
+SENTINEL_VALUE = -1
+NO_PRED_KEY = -(2**31)  # int32 min: identity of the max-tracked predecessor
+NO_SUCC_KEY = 2**31 - 1  # int32 max: identity of the min-tracked successor
 
 
-def _descend_one_level(q, idx, val, found, active, keys, vals):
-    """One compare-descend step; ``idx`` is the global BFS node index."""
+def _descend_one_level(q, state, active, keys, vals, left_size, ordered):
+    """One compare-descend step; ``idx`` is the global BFS index.
+
+    With ``ordered`` (a Python flag: the level loop is unrolled, so the
+    membership configuration emits none of the tracking ops) the step also
+    updates the ordered state: ``left_size`` is the left-subtree size
+    ``2^{H-l} - 1`` at this level -- a right turn skips the node plus that
+    whole subtree, an exact hit skips just the subtree, which is the rank
+    arithmetic range queries build on (DESIGN.md §6).
+    """
+    idx, val, found, pk, pv, sk, sv, rank = state
     safe = jnp.clip(idx, 0, keys.shape[0] - 1)
     nk = keys[safe]
     nv = vals[safe]
-    hit = (nk == q) & ~found & active
+    live = active & ~found
+    hit = (nk == q) & live
+    go_right = live & ~hit & (q > nk)
     val = jnp.where(hit, nv, val)
     found = found | hit
-    go_right = (q > nk).astype(idx.dtype)
-    idx = jnp.where(found | ~active, idx, 2 * idx + 1 + go_right)
-    return idx, val, found
+    if ordered:
+        go_left = live & ~hit & (q < nk)
+        pk = jnp.where(go_right, nk, pk)  # right-turn keys increase: last == max
+        pv = jnp.where(go_right, nv, pv)
+        sk = jnp.where(go_left, nk, sk)  # left-turn keys decrease: last == min
+        sv = jnp.where(go_left, nv, sv)
+        rank = rank + jnp.where(go_right, left_size + 1, 0)
+        rank = rank + jnp.where(hit, left_size, 0)
+    idx = jnp.where(found | ~active, idx, 2 * idx + 1 + go_right.astype(idx.dtype))
+    return (idx, val, found, pk, pv, sk, sv, rank)
 
 
 def _forest_search_kernel(
@@ -58,38 +87,52 @@ def _forest_search_kernel(
     flat_v_ref,
     q_ref,
     act_ref,
-    val_ref,
-    found_ref,
-    *,
+    *out_refs,
     register_levels: int,
     height: int,
+    ordered: bool,
 ):
+    """ONE kernel body for both configurations of the datapath: membership
+    (2 output refs) and ordered (7 output refs, DESIGN.md §6)."""
     q = q_ref[0, :]
     active = act_ref[0, :] != 0
-    idx = jnp.zeros(q.shape, jnp.int32)
-    val = jnp.full(q.shape, SENTINEL_VALUE, dtype=jnp.int32)
-    found = jnp.zeros(q.shape, bool)
+    state = (
+        jnp.zeros(q.shape, jnp.int32),  # idx
+        jnp.full(q.shape, SENTINEL_VALUE, dtype=jnp.int32),  # val
+        jnp.zeros(q.shape, bool),  # found
+        jnp.full(q.shape, NO_PRED_KEY, dtype=jnp.int32),  # pred key
+        jnp.full(q.shape, SENTINEL_VALUE, dtype=jnp.int32),  # pred value
+        jnp.full(q.shape, NO_SUCC_KEY, dtype=jnp.int32),  # succ key
+        jnp.full(q.shape, SENTINEL_VALUE, dtype=jnp.int32),  # succ value
+        jnp.zeros(q.shape, jnp.int32),  # rank
+    )
 
     # --- register layer: levels [0, r) live in one small broadcast block
     # (global BFS index == offset inside the register block there).
     reg_k = reg_k_ref[0, :]
     reg_v = reg_v_ref[0, :]
-    for _l in range(register_levels):
-        idx, val, found = _descend_one_level(q, idx, val, found, active, reg_k, reg_v)
+    for l in range(register_levels):
+        state = _descend_one_level(
+            q, state, active, reg_k, reg_v, (1 << (height - l)) - 1, ordered
+        )
 
     # --- deep levels: gathers into the flat level-major tree ("BRAM") block.
     flat_k = flat_k_ref[0, :]
     flat_v = flat_v_ref[0, :]
-    for _l in range(register_levels, height + 1):
-        idx, val, found = _descend_one_level(
-            q, idx, val, found, active, flat_k, flat_v
+    for l in range(register_levels, height + 1):
+        state = _descend_one_level(
+            q, state, active, flat_k, flat_v, (1 << (height - l)) - 1, ordered
         )
 
-    val_ref[0, :] = val
-    found_ref[0, :] = found.astype(jnp.int32)
+    _, val, found, pk, pv, sk, sv, rank = state
+    outs = (val, found.astype(jnp.int32))
+    if ordered:
+        outs = outs + (pk, pv, sk, sv, rank)
+    for ref, arr in zip(out_refs, outs):
+        ref[0, :] = arr
 
 
-def bst_search_forest_pallas(
+def bst_ordered_forest_pallas(
     forest_keys: jax.Array,
     forest_values: jax.Array,
     queries: jax.Array,
@@ -99,14 +142,20 @@ def bst_search_forest_pallas(
     block_q: int = 512,
     interpret: bool = True,
     shared_tree: bool = False,
-) -> Tuple[jax.Array, jax.Array]:
-    """Search a forest of BFS-layout perfect trees in ONE ``pallas_call``.
+    ordered: bool = True,
+) -> Tuple[jax.Array, ...]:
+    """Ordered search over a forest of BFS-layout trees in ONE ``pallas_call``.
 
     forest_keys/forest_values: (n_rows, n) flat level-major trees, where
     ``n = 2^{height+1} - 1``.  queries/active: (n_trees, B).  With
     ``shared_tree=True`` the operand has one row that every grid row reads
     (duplicated partitioning -- replication without materialisation).
-    Returns (values, found), each (n_trees, B).
+
+    Returns per-lane (n_trees, B) arrays
+    ``(values, found, pred_keys, pred_values, succ_keys, succ_values, rank)``
+    -- the ordered contract of DESIGN.md §6: strict predecessor/successor
+    ancestors (NO_PRED_KEY / NO_SUCC_KEY when absent) and the count of
+    stored keys strictly below each query.
     """
     if forest_keys.ndim != 2 or queries.ndim != 2:
         raise ValueError("forest operands and queries must be 2-D")
@@ -132,9 +181,15 @@ def bst_search_forest_pallas(
     chunk_map = lambda t, i: (t, i)  # noqa: E731
 
     kernel = functools.partial(
-        _forest_search_kernel, register_levels=register_levels, height=height
+        _forest_search_kernel,
+        register_levels=register_levels,
+        height=height,
+        ordered=ordered,
     )
-    out_val, out_found = pl.pallas_call(
+    n_out = 7 if ordered else 2
+    out_spec = pl.BlockSpec((1, block_q), chunk_map)
+    out_shape = jax.ShapeDtypeStruct(qp.shape, jnp.int32)
+    outs = pl.pallas_call(
         kernel,
         grid=(T, nq),
         in_specs=[
@@ -145,14 +200,8 @@ def bst_search_forest_pallas(
             pl.BlockSpec((1, block_q), chunk_map),
             pl.BlockSpec((1, block_q), chunk_map),
         ],
-        out_specs=[
-            pl.BlockSpec((1, block_q), chunk_map),
-            pl.BlockSpec((1, block_q), chunk_map),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct(qp.shape, jnp.int32),
-            jax.ShapeDtypeStruct(qp.shape, jnp.int32),
-        ],
+        out_specs=[out_spec] * n_out,
+        out_shape=[out_shape] * n_out,
         interpret=interpret,
     )(
         forest_keys[:, :reg_n],
@@ -162,7 +211,40 @@ def bst_search_forest_pallas(
         qp,
         ap,
     )
-    return out_val[:, :B], out_found[:, :B] != 0
+    outs = tuple(o[:, :B] for o in outs)
+    return (outs[0], outs[1] != 0) + outs[2:]
+
+
+def bst_search_forest_pallas(
+    forest_keys: jax.Array,
+    forest_values: jax.Array,
+    queries: jax.Array,
+    height: int,
+    active: Optional[jax.Array] = None,
+    register_levels: int = 3,
+    block_q: int = 512,
+    interpret: bool = True,
+    shared_tree: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Membership search: the same kernel body in its 2-output configuration.
+
+    Returns (values, found), each (n_trees, B).  One ``pallas_call``; the
+    unroll skips the ordered tracking entirely (``ordered=False`` is a
+    Python flag), so lookups pay nothing for the §6 datapath.
+    """
+    out = bst_ordered_forest_pallas(
+        forest_keys,
+        forest_values,
+        queries,
+        height,
+        active=active,
+        register_levels=register_levels,
+        block_q=block_q,
+        interpret=interpret,
+        shared_tree=shared_tree,
+        ordered=False,
+    )
+    return out[0], out[1]
 
 
 def bst_search_pallas(

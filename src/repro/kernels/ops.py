@@ -15,7 +15,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.bst_search import bst_search_forest_pallas, bst_search_pallas
+from repro.kernels.bst_search import (
+    bst_ordered_forest_pallas,
+    bst_search_forest_pallas,
+    bst_search_pallas,
+)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.queue_dispatch import queue_dispatch_pallas
 
@@ -62,6 +66,63 @@ def bst_search_forest(
             lambda k, v, q, a: ref.bst_search_ref(k, v, q, height, a)
         )(fk, fv, queries, active)
     return bst_search_forest_pallas(
+        forest_keys,
+        forest_values,
+        queries,
+        height,
+        active=active,
+        register_levels=register_levels,
+        block_q=block_q,
+        interpret=interpret,
+        shared_tree=shared_tree,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "height",
+        "register_levels",
+        "block_q",
+        "interpret",
+        "shared_tree",
+        "use_ref",
+    ),
+)
+def bst_ordered_forest(
+    forest_keys: jax.Array,
+    forest_values: jax.Array,
+    queries: jax.Array,
+    height: int,
+    active: Optional[jax.Array] = None,
+    register_levels: int = 3,
+    block_q: int = 512,
+    interpret: bool = True,
+    shared_tree: bool = False,
+    use_ref: bool = False,
+) -> Tuple[jax.Array, ...]:
+    """Forest-batched ORDERED search (DESIGN.md §6): one pass per query
+    yields ``(values, found, pred_keys, pred_values, succ_keys,
+    succ_values, rank)``, each (n_trees, B).
+
+    The single descent behind every ordered query op (predecessor,
+    successor, range_count, range_scan) for every strategy -- same
+    forest-batching contract as ``bst_search_forest``, same one
+    ``pallas_call`` lowering.
+    """
+    if use_ref:
+        T = queries.shape[0]
+        fk = forest_keys
+        fv = forest_values
+        if shared_tree:
+            fk = jnp.broadcast_to(fk, (T,) + fk.shape[1:])
+            fv = jnp.broadcast_to(fv, (T,) + fv.shape[1:])
+        if active is None:
+            active = jnp.ones(queries.shape, bool)
+        return jax.vmap(
+            lambda k, v, q, a: ref.bst_ordered_ref(k, v, q, height, a)
+        )(fk, fv, queries, active)
+    return bst_ordered_forest_pallas(
         forest_keys,
         forest_values,
         queries,

@@ -12,6 +12,64 @@ import jax
 import jax.numpy as jnp
 
 SENTINEL_VALUE = jnp.int32(-1)
+NO_PRED_KEY = jnp.int32(-(2**31))
+NO_SUCC_KEY = jnp.int32(2**31 - 1)
+
+
+def bst_ordered_ref(
+    tree_keys: jax.Array,
+    tree_values: jax.Array,
+    queries: jax.Array,
+    height: int,
+    active: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, ...]:
+    """Ordered BFS-layout descent oracle (DESIGN.md §6).
+
+    Returns ``(values, found, pred_keys, pred_values, succ_keys,
+    succ_values, rank)`` -- bit-identical ground truth for the ordered
+    forest kernel: strict predecessor/successor ancestors plus the count of
+    stored keys strictly below each query.
+    """
+    n = tree_keys.shape[0]
+    B = queries.shape[0]
+    if active is None:
+        active = jnp.ones((B,), dtype=bool)
+    levels = jnp.arange(height + 1)
+    left_sizes = ((1 << (height - levels)) - 1).astype(jnp.int32)
+
+    def step(carry, left):
+        idx, val, found, pk, pv, sk, sv, rank = carry
+        nk = tree_keys[idx]
+        nv = tree_values[idx]
+        live = active & ~found
+        hit = (nk == queries) & live
+        go_right = live & ~hit & (queries > nk)
+        go_left = live & ~hit & (queries < nk)
+        val = jnp.where(hit, nv, val)
+        found = found | hit
+        pk = jnp.where(go_right, nk, pk)
+        pv = jnp.where(go_right, nv, pv)
+        sk = jnp.where(go_left, nk, sk)
+        sv = jnp.where(go_left, nv, sv)
+        rank = rank + jnp.where(go_right, left + 1, 0) + jnp.where(hit, left, 0)
+        nxt = 2 * idx + 1 + go_right.astype(idx.dtype)
+        idx = jnp.where(found, idx, jnp.minimum(nxt, n - 1))
+        return (idx, val, found, pk, pv, sk, sv, rank), None
+
+    init = (
+        jnp.zeros((B,), jnp.int32),
+        jnp.full((B,), SENTINEL_VALUE, jnp.int32),
+        jnp.zeros((B,), bool),
+        jnp.full((B,), NO_PRED_KEY, jnp.int32),
+        jnp.full((B,), SENTINEL_VALUE, jnp.int32),
+        jnp.full((B,), NO_SUCC_KEY, jnp.int32),
+        jnp.full((B,), SENTINEL_VALUE, jnp.int32),
+        jnp.zeros((B,), jnp.int32),
+    )
+    (_, val, found, pk, pv, sk, sv, rank), _ = jax.lax.scan(
+        step, init, left_sizes
+    )
+    return val, found & active, pk, pv, sk, sv, rank
 
 
 def bst_search_ref(

@@ -10,6 +10,12 @@ This is the roofline for the reproduced system itself, complementing the
 LM-architecture table: a 2^21-node tree (like the paper's 2^20-node
 discussion scaled to fill VMEM-era HBM), 16 M keys per global chunk.
 
+The lowered pipeline is the SAME phase chain the engines run (core/plans:
+route -> dispatch -> all_to_all -> forest descent -> combine); we lower the
+membership variant, which bounds the ordered query ops too -- every op is
+one descent of identical traffic shape, plus a fixed 5 extra int32 lanes of
+OrderedResult payload on the return collective (DESIGN.md §6).
+
   PYTHONPATH=src python -m repro.launch.dryrun_bst [--mesh single|multi]
 """
 

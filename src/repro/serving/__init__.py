@@ -1,8 +1,9 @@
-from repro.serving.bst_server import BSTServer, ServerStats
+from repro.serving.bst_server import BSTServer, OpStats, ServerStats
 from repro.serving.serve_loop import make_serve_step, make_prefill_fn, greedy_generate
 
 __all__ = [
     "BSTServer",
+    "OpStats",
     "ServerStats",
     "make_serve_step",
     "make_prefill_fn",

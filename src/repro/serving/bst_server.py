@@ -5,10 +5,15 @@ full throughput from an immutable snapshot while inserts/deletes accumulate;
 a bulk update builds a fresh perfect tree and the server swaps snapshots
 atomically between chunks.  This module is that loop, TPU-native:
 
+  * **typed request kinds** -- every query op of DESIGN.md §6 is a request
+    kind: ``lookup`` / ``predecessor`` / ``successor`` via ``submit``,
+    ``range_count`` / ``range_scan`` via ``submit_range``.  The drain packs
+    each kind into its own fixed-shape chunk stream (one jit shape per op),
+    and stats are accounted per op;
   * **chunk accumulation** -- requests of any size are queued and packed
     into fixed ``chunk_size`` engine calls (the jit shape), padding only the
-    final partial chunk; per-request results are sliced back out, so padded
-    lanes never leak into answers or accounting;
+    final partial chunk per op; per-request results are sliced back out, so
+    padded lanes never leak into answers or accounting;
   * **pluggable engine config** -- any ``EngineConfig`` (strategy, mapping,
     kernel/reference path) serves the same request API;
   * **snapshot swap** -- ``apply_updates`` runs ``core.updates`` bulk
@@ -28,10 +33,29 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.core import plans as plans_lib
 from repro.core import tree as tree_lib
 from repro.core import updates as updates_lib
 from repro.core.engine import BSTEngine, EngineConfig
 from repro.core.tree import TreeData
+
+# Derived from the plans-layer contract so a new op cannot drift past the
+# server's request typing.
+RANGE_OPS = plans_lib.RANGE_OPS
+POINT_OPS = tuple(op for op in plans_lib.QUERY_OPS if op not in RANGE_OPS)
+
+
+@dataclasses.dataclass
+class OpStats:
+    """Per-op serving counters (one entry per request kind actually seen)."""
+
+    served: int = 0  # keys (point ops) / ranges (range ops) answered
+    chunks: int = 0  # engine invocations
+    busy_s: float = 0.0  # time inside the engine (incl. padding lanes)
+
+    @property
+    def keys_per_sec(self) -> float:
+        return self.served / self.busy_s if self.busy_s > 0 else 0.0
 
 
 @dataclasses.dataclass
@@ -39,24 +63,38 @@ class ServerStats:
     """Cumulative serving counters (reset with ``BSTServer.reset_stats``)."""
 
     requests: int = 0  # submit() calls
-    submitted: int = 0  # keys accepted
-    served: int = 0  # keys answered
-    found: int = 0  # hits, accumulated per chunk
+    submitted: int = 0  # keys/ranges accepted
+    served: int = 0  # keys/ranges answered
+    found: int = 0  # lookup hits, accumulated per chunk
     chunks: int = 0  # engine invocations
     busy_s: float = 0.0  # time inside the engine (incl. padding lanes)
     snapshot_swaps: int = 0
+    per_op: Dict[str, OpStats] = dataclasses.field(default_factory=dict)
 
     @property
     def keys_per_sec(self) -> float:
         return self.served / self.busy_s if self.busy_s > 0 else 0.0
 
+    def op(self, name: str) -> OpStats:
+        return self.per_op.setdefault(name, OpStats())
+
+
+@dataclasses.dataclass
+class _Request:
+    ticket: int
+    op: str
+    a: np.ndarray  # keys (point ops) / range lows
+    b: Optional[np.ndarray]  # range highs (range ops only)
+
 
 class BSTServer:
-    """Accumulate lookup requests, serve them in fixed-shape chunks.
+    """Accumulate typed query requests, serve them in fixed-shape chunks.
 
     Single-threaded by design: the FPGA frontend is one stream of key
-    chunks, and on TPU one jit shape amortises compilation.  Thread-safety
-    is the caller's concern (wrap submit/drain in a lock if shared).
+    chunks, and on TPU one jit shape per op amortises compilation.
+    Thread-safety is the caller's concern (wrap submit/drain in a lock if
+    shared).  ``scan_k`` fixes range_scan's bounded fan-out (part of the jit
+    shape, so it is a server-level constant).
     """
 
     def __init__(
@@ -65,26 +103,30 @@ class BSTServer:
         values,
         config: EngineConfig = EngineConfig(),
         chunk_size: int = 8192,
+        scan_k: int = 8,
     ):
         if chunk_size < 1:
             raise ValueError("chunk_size must be positive")
+        if scan_k < 1:
+            raise ValueError("scan_k must be positive")
         self.config = config
         self.chunk_size = chunk_size
+        self.scan_k = scan_k
         self.stats = ServerStats()
-        self._pending: List[Tuple[int, np.ndarray]] = []
+        self._pending: List[_Request] = []
         self._pending_keys = 0
         self._next_ticket = 0
-        self._warmed = False
+        self._warm_ops: Tuple[str, ...] = ()
         self._install(tree_lib.build_tree(np.asarray(keys), np.asarray(values)))
 
     # --------------------------------------------------------------- snapshot
     def _install(self, tree: TreeData) -> None:
         self._tree = tree
         self._engine = BSTEngine.from_tree(tree, self.config)
-        if self._warmed:
+        if self._warm_ops:
             # The fresh engine's jit closes over the new snapshot; re-warm so
             # post-swap chunks (and keys/sec accounting) stay compile-free.
-            self.warmup()
+            self.warmup(self._warm_ops)
 
     @property
     def snapshot(self) -> TreeData:
@@ -95,14 +137,20 @@ class BSTServer:
     def engine(self) -> BSTEngine:
         return self._engine
 
-    def warmup(self) -> None:
+    def warmup(self, ops: Tuple[str, ...] = ("lookup",)) -> None:
         """Populate the jit cache so timing excludes compilation.
 
-        Once called, every snapshot swap re-warms the fresh engine too.
+        Pass the ops the workload will use; once called, every snapshot swap
+        re-warms the same set on the fresh engine too.
         """
         dummy = np.zeros(self.chunk_size, np.int32)
-        jax.block_until_ready(self._engine.lookup(dummy))
-        self._warmed = True
+        for op in ops:
+            if op in RANGE_OPS:
+                out = self._engine.query(op, dummy, dummy, k=self.scan_k)
+            else:
+                out = self._engine.query(op, dummy)
+            jax.block_until_ready(out)
+        self._warm_ops = tuple(dict.fromkeys(self._warm_ops + tuple(ops)))
 
     def apply_updates(
         self,
@@ -128,65 +176,156 @@ class BSTServer:
         return tree
 
     # --------------------------------------------------------------- requests
-    def submit(self, request_keys) -> int:
-        """Queue a lookup request; returns a ticket redeemable at drain()."""
+    def submit(self, request_keys, op: str = "lookup") -> int:
+        """Queue a point-query request; returns a ticket for drain().
+
+        ``op`` is one of ``lookup`` (values, found), ``predecessor`` /
+        ``successor`` (keys, values, ok) -- DESIGN.md §6 semantics.
+        """
+        if op not in POINT_OPS:
+            raise ValueError(f"submit() op must be one of {POINT_OPS}, got {op!r}")
         req = np.atleast_1d(np.asarray(request_keys, np.int32))
         if req.ndim != 1:
             raise ValueError("request_keys must be scalar or 1-D")
-        ticket = self._next_ticket
+        return self._enqueue(_Request(0, op, req, None), req.size)
+
+    def submit_range(self, lo, hi, op: str = "range_count") -> int:
+        """Queue a range request over [lo, hi] (inclusive); returns a ticket.
+
+        ``op`` is ``range_count`` (counts) or ``range_scan`` (keys (B,
+        scan_k), values, counts).  lo/hi must be equal-length (or scalar).
+        """
+        if op not in RANGE_OPS:
+            raise ValueError(f"submit_range() op must be one of {RANGE_OPS}, got {op!r}")
+        lo = np.atleast_1d(np.asarray(lo, np.int32))
+        hi = np.atleast_1d(np.asarray(hi, np.int32))
+        if lo.shape != hi.shape or lo.ndim != 1:
+            raise ValueError("lo/hi must be equal-length scalars or 1-D arrays")
+        return self._enqueue(_Request(0, op, lo, hi), lo.size)
+
+    def _enqueue(self, req: _Request, size: int) -> int:
+        req.ticket = self._next_ticket
         self._next_ticket += 1
-        self._pending.append((ticket, req))
-        self._pending_keys += req.size
+        self._pending.append(req)
+        self._pending_keys += size
         self.stats.requests += 1
-        self.stats.submitted += req.size
-        return ticket
+        self.stats.submitted += size
+        return req.ticket
 
     def pending(self) -> int:
-        """Keys queued but not yet served."""
+        """Keys/ranges queued but not yet served."""
         return self._pending_keys
 
-    def drain(self) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
-        """Serve every queued request; returns {ticket: (values, found)}.
+    # ------------------------------------------------------------------ drain
+    def drain(self) -> Dict[int, tuple]:
+        """Serve every queued request; returns {ticket: op results}.
 
-        The queue is packed into ``chunk_size`` engine calls; only the final
-        partial chunk is padded, and padded lanes are dropped before results
-        or accounting.
+        Result shapes per op: ``lookup`` -> (values, found);
+        ``predecessor``/``successor`` -> (keys, values, ok);
+        ``range_count`` -> (counts,); ``range_scan`` -> (keys, values,
+        counts).  Each op's stream is packed into its own ``chunk_size``
+        engine calls; only the final partial chunk per op is padded, and
+        padded lanes are dropped before results or accounting.
         """
         if not self._pending:
             return {}
-        batch = list(self._pending)
+        batch = self._pending
         self._pending = []
         self._pending_keys = 0
 
-        stream = np.concatenate([req for _, req in batch])
-        B = stream.size
-        pad = (-B) % self.chunk_size
-        if pad:
-            stream = np.pad(stream, (0, pad))
-        vals = np.empty(stream.size, np.int32)
-        found = np.empty(stream.size, bool)
-        for lo in range(0, stream.size, self.chunk_size):
-            t0 = time.perf_counter()
-            v, f = self._engine.lookup(stream[lo : lo + self.chunk_size])
-            jax.block_until_ready((v, f))
-            self.stats.busy_s += time.perf_counter() - t0
-            self.stats.chunks += 1
-            vals[lo : lo + self.chunk_size] = np.asarray(v)
-            found[lo : lo + self.chunk_size] = np.asarray(f)
+        by_op: Dict[str, List[_Request]] = {}
+        for req in batch:
+            by_op.setdefault(req.op, []).append(req)
 
-        self.stats.served += B
-        self.stats.found += int(found[:B].sum())  # per chunk-run, real lanes only
-        out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
-        lo = 0
-        for ticket, req in batch:
-            hi = lo + req.size
-            out[ticket] = (vals[lo:hi], found[lo:hi])
-            lo = hi
+        out: Dict[int, tuple] = {}
+        for op, reqs in by_op.items():
+            a = np.concatenate([r.a for r in reqs])
+            b = np.concatenate([r.b for r in reqs]) if op in RANGE_OPS else None
+            columns = self._serve_stream(op, a, b)
+            lo = 0
+            for r in reqs:
+                hi = lo + r.a.size
+                out[r.ticket] = tuple(col[lo:hi] for col in columns)
+                lo = hi
         return out
 
+    def _empty_columns(self, op: str):
+        """Result columns for a zero-key stream (no engine call needed)."""
+        if op == "lookup":
+            return [np.empty(0, np.int32), np.empty(0, bool)]
+        if op in ("predecessor", "successor"):
+            return [np.empty(0, np.int32), np.empty(0, np.int32), np.empty(0, bool)]
+        if op == "range_count":
+            return [np.empty(0, np.int32)]
+        k = self.scan_k
+        return [
+            np.empty((0, k), np.int32),
+            np.empty((0, k), np.int32),
+            np.empty(0, np.int32),
+        ]
+
+    def _serve_stream(self, op: str, a: np.ndarray, b: Optional[np.ndarray]):
+        """Run one op's packed stream through fixed-shape engine chunks."""
+        B = a.size
+        if B == 0:
+            return self._empty_columns(op)
+        pad = (-B) % self.chunk_size
+        if pad:
+            a = np.pad(a, (0, pad))
+            if b is not None:
+                b = np.pad(b, (0, pad))
+        columns = None
+        for lo in range(0, a.size, self.chunk_size):
+            sl = slice(lo, lo + self.chunk_size)
+            t0 = time.perf_counter()
+            if op in RANGE_OPS:
+                res = self._engine.query(op, a[sl], b[sl], k=self.scan_k)
+            else:
+                res = self._engine.query(op, a[sl])
+            if not isinstance(res, tuple):
+                res = (res,)
+            jax.block_until_ready(res)
+            dt = time.perf_counter() - t0
+            self.stats.busy_s += dt
+            self.stats.chunks += 1
+            ops = self.stats.op(op)
+            ops.busy_s += dt
+            ops.chunks += 1
+            if columns is None:
+                columns = [
+                    np.empty((a.size,) + np.asarray(c).shape[1:], np.asarray(c).dtype)
+                    for c in res
+                ]
+            for col, c in zip(columns, res):
+                col[sl] = np.asarray(c)
+            if op == "lookup":
+                # hits accumulated per chunk, padded lanes excluded below
+                real = min(self.chunk_size, B - lo)
+                self.stats.found += int(np.asarray(res[1])[:real].sum())
+        self.stats.served += B
+        self.stats.op(op).served += B
+        return [col[:B] for col in columns]
+
+    # ------------------------------------------------------------ convenience
     def lookup(self, request_keys) -> Tuple[np.ndarray, np.ndarray]:
         """Synchronous convenience: submit one request and drain the queue."""
         ticket = self.submit(request_keys)
+        return self.drain()[ticket]
+
+    def predecessor(self, request_keys):
+        ticket = self.submit(request_keys, op="predecessor")
+        return self.drain()[ticket]
+
+    def successor(self, request_keys):
+        ticket = self.submit(request_keys, op="successor")
+        return self.drain()[ticket]
+
+    def range_count(self, lo, hi) -> np.ndarray:
+        ticket = self.submit_range(lo, hi, op="range_count")
+        return self.drain()[ticket][0]
+
+    def range_scan(self, lo, hi):
+        ticket = self.submit_range(lo, hi, op="range_scan")
         return self.drain()[ticket]
 
     # ------------------------------------------------------------- accounting

@@ -59,6 +59,57 @@ def test_distributed_bst_lookup_vertical_partitioning():
     assert "OK" in out
 
 
+def test_distributed_ordered_query_ops():
+    """query(op, ...) over the all_to_all engine and the DP engine matches
+    the NumPy searchsorted oracle for every ordered op (DESIGN.md §6)."""
+    out = run_sub("""
+        from repro.core import tree as T
+        from repro.core.distributed import make_distributed_query, make_dup_query
+        from repro.data.keysets import make_tree_data
+        mesh = make_mesh((2, 4), ("data", "model"))
+        keys, values = make_tree_data(4000)
+        tr = T.build_tree(keys, values)
+        sk = np.sort(np.asarray(keys))
+        rng = np.random.default_rng(0)
+        q = rng.choice(np.concatenate([keys, keys + 1, [1]]), size=256).astype(np.int32)
+        lo = rng.choice(keys, 256).astype(np.int32)
+        hi = (lo + rng.integers(-5, 500, size=256)).astype(np.int32)
+        exp_cnt = (np.searchsorted(sk, hi, 'right') - np.searchsorted(sk, lo, 'left')).clip(0)
+        i = np.searchsorted(sk, q, 'right') - 1
+        exp_pk = np.where(i >= 0, sk[np.clip(i, 0, None)], T.NO_PRED_KEY)
+        start = np.searchsorted(sk, lo, 'left')
+        with mesh:
+            runs = [make_distributed_query(tr, mesh, axis="model"),
+                    make_distributed_query(tr, mesh, axis="model", capacity=48, stall_rounds=2),
+                    make_dup_query(tr, mesh, axis="data")]
+            for run in runs:
+                pk, pv, ok = run("predecessor", q)
+                assert np.array_equal(np.asarray(pk), exp_pk)
+                assert np.array_equal(np.asarray(ok), i >= 0)
+                cnt = run("range_count", lo, hi)
+                assert np.array_equal(np.asarray(cnt), exp_cnt)
+                K, V, tk = run("range_scan", lo, hi, k=4)
+                assert np.array_equal(np.asarray(tk), np.minimum(exp_cnt, 4))
+                for j in range(0, 256, 41):
+                    t = int(np.asarray(tk)[j])
+                    assert np.array_equal(np.asarray(K)[j, :t], sk[start[j]:start[j] + t]), j
+                print("engine ok")
+            # adversarial skew: every key routes to ONE subtree, tiny buffers,
+            # no stall rounds -- the final drain round must keep ranks exact.
+            skew = (np.full(256, sk[10]) + np.arange(256) % 3).astype(np.int32)
+            run = make_distributed_query(tr, mesh, axis="model", capacity=2, stall_rounds=0)
+            pk, pv, ok = run("predecessor", skew)
+            i = np.searchsorted(sk, skew, 'right') - 1
+            assert np.array_equal(np.asarray(pk), sk[i])
+            cnt = run("range_count", skew, skew + 100)
+            exp = np.searchsorted(sk, skew + 100, 'right') - np.searchsorted(sk, skew, 'left')
+            assert np.array_equal(np.asarray(cnt), exp)
+            print("overflow drain ok")
+        print("ALL OK")
+    """)
+    assert "ALL OK" in out
+
+
 def test_pjit_train_step_all_families_small_mesh():
     """Every family's sharded train step lowers AND runs on a (2,2,2) mesh."""
     out = run_sub("""

@@ -124,6 +124,62 @@ def test_kernel_engine_height13_all_strategies():
         np.testing.assert_array_equal(np.asarray(f), np.asarray(ref_f), err_msg=name)
 
 
+@pytest.mark.parametrize("op", ["predecessor", "range_count", "range_scan"])
+def test_single_pallas_call_per_ordered_op(op):
+    """Every ordered op lowers through exactly one pallas_call too --
+    range ops descend the concatenated lo||hi batch (DESIGN.md §6)."""
+    keys, values = make_tree_data(2047, seed=5)
+    tree = T.build_tree(keys, values)
+    plan = plans.make_plan(tree, strategy="hyb", n_trees=4)
+    q = _queries(keys, 256, seed=6)
+    args = (jnp.asarray(q),)
+    if op in plans.RANGE_OPS:
+        args = (jnp.asarray(q), jnp.asarray(q + 64))
+
+    def run(*a):
+        return plans.ordered_query(plan, op, *a, use_kernel=True, interpret=True)
+
+    jaxpr = jax.make_jaxpr(run)(*args)
+    assert _count_pallas_calls(jaxpr.jaxpr) == 1, op
+
+
+@pytest.mark.parametrize("height", [4, 13])
+def test_ordered_kernel_matches_ordered_reference(height):
+    """The kernel's ordered outputs (pred/succ ancestors, rank) are
+    bit-identical to the jnp oracle at shallow and deep heights."""
+    n_keys = (1 << (height + 1)) - 1
+    keys, values = make_tree_data(n_keys, seed=height)
+    tree = T.build_tree(keys, values)
+    q = _queries(keys, 512, seed=height)
+    ref = T.search_reference_ordered(tree, jnp.asarray(q))
+    out = ops.bst_ordered_forest(
+        tree.keys[None], tree.values[None], jnp.asarray(q)[None], height=height
+    )
+    for name, want, got in zip(ref._fields, ref, out):
+        np.testing.assert_array_equal(
+            np.asarray(got[0]), np.asarray(want), err_msg=name
+        )
+
+
+def test_ordered_kernel_inactive_lanes_identity():
+    """Inactive lanes report the tracking identities (merge-safe fills)."""
+    keys, values = make_tree_data(511, seed=3)
+    tree = T.build_tree(keys, values)
+    q = _queries(keys, 128, seed=4)
+    act = np.zeros(128, bool)
+    out = ops.bst_ordered_forest(
+        tree.keys[None],
+        tree.values[None],
+        jnp.asarray(q)[None],
+        height=tree.height,
+        active=jnp.asarray(act)[None],
+    )
+    val, found, pk, pv, sk, sv, rank = (np.asarray(o[0]) for o in out)
+    assert not found.any()
+    assert (pk == T.NO_PRED_KEY).all() and (sk == T.NO_SUCC_KEY).all()
+    assert (val == T.SENTINEL_VALUE).all() and (rank == 0).all()
+
+
 def test_forest_kernel_active_mask():
     """Inactive lanes can neither hit nor leak values."""
     keys, values = make_tree_data(511, seed=3)

@@ -1,0 +1,255 @@
+"""Ordered-query acceptance tests (DESIGN.md §6).
+
+Every op (predecessor / successor / range_count / range_scan) must be
+bit-identical to a plain NumPy ``searchsorted`` oracle across every
+strategy, on BOTH the kernel and reference paths -- the same invariant the
+membership search established -- including the edge cases: key below min /
+above max, empty / whole-tree ranges, single-node trees, and
+post-bulk-update snapshots.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import tree as T
+from repro.core import updates as updates_lib
+from repro.core.engine import BSTEngine, EngineConfig
+from repro.data.keysets import make_tree_data
+from repro.serving import BSTServer
+
+
+# ------------------------------------------------------------ NumPy oracle
+# The product's own sorted-view recovery is the oracle substrate: if its
+# sentinel/upsert semantics change, these tests must see it.
+sorted_view = updates_lib.sorted_view
+
+
+def oracle(sk, sv, op, a, b=None, k=8):
+    """Ground truth from np.searchsorted over the sorted key/value view."""
+    a = np.asarray(a)
+    if op == "lookup":
+        i = np.searchsorted(sk, a, "left")
+        found = (i < sk.size) & (sk[np.clip(i, 0, sk.size - 1)] == a)
+        vals = np.where(found, sv[np.clip(i, 0, sk.size - 1)], T.SENTINEL_VALUE)
+        return vals.astype(np.int32), found
+    if op == "predecessor":  # floor: largest key <= a
+        i = np.searchsorted(sk, a, "right") - 1
+        ok = i >= 0
+        ii = np.clip(i, 0, None)
+        keys = np.where(ok, sk[ii], T.NO_PRED_KEY)
+        vals = np.where(ok, sv[ii], T.SENTINEL_VALUE)
+        return keys.astype(np.int32), vals.astype(np.int32), ok
+    if op == "successor":  # ceiling: smallest key >= a
+        i = np.searchsorted(sk, a, "left")
+        ok = i < sk.size
+        ii = np.clip(i, 0, sk.size - 1)
+        keys = np.where(ok, sk[ii], T.NO_SUCC_KEY)
+        vals = np.where(ok, sv[ii], T.SENTINEL_VALUE)
+        return keys.astype(np.int32), vals.astype(np.int32), ok
+    b = np.asarray(b)
+    counts = (
+        np.searchsorted(sk, b, "right") - np.searchsorted(sk, a, "left")
+    ).clip(0)
+    if op == "range_count":
+        return counts.astype(np.int32)
+    start = np.searchsorted(sk, a, "left")
+    take = np.minimum(counts, k)
+    keys = np.full((a.size, k), T.SENTINEL_KEY, np.int32)
+    vals = np.full((a.size, k), T.SENTINEL_VALUE, np.int32)
+    for i in range(a.size):
+        t = take[i]
+        keys[i, :t] = sk[start[i] : start[i] + t]
+        vals[i, :t] = sv[start[i] : start[i] + t]
+    return keys, vals, take.astype(np.int32)
+
+
+def assert_op_matches(eng, sk, sv, op, a, b=None, k=8, msg=""):
+    got = eng.query(op, a, b, k=k) if b is not None else eng.query(op, a)
+    want = oracle(sk, sv, op, a, b, k=k)
+    if not isinstance(got, tuple):
+        got, want = (got,), (want,)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=f"{op} {msg}")
+
+
+# The acceptance matrix: hrz, dup and hyb (queue AND direct), kernel and
+# reference paths.  Kept to four configs so interpret-mode compiles stay
+# tractable on CPU.
+MATRIX = [
+    EngineConfig(strategy="hrz"),
+    EngineConfig(strategy="dup", n_trees=4),
+    EngineConfig(strategy="hyb", n_trees=8, mapping="queue"),
+    EngineConfig(strategy="hyb", n_trees=4, mapping="direct"),
+]
+
+
+def _mixed_queries(keys, rng, size=256):
+    pool = np.concatenate([keys, keys + 1, keys - 1])
+    return rng.choice(pool, size=size).astype(np.int32)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("cfg", MATRIX, ids=lambda c: c.name)
+def test_all_ops_match_numpy_oracle(cfg, use_kernel):
+    keys, values = make_tree_data(2047, seed=11)
+    eng = BSTEngine(keys, values, dataclasses.replace(cfg, use_kernel=use_kernel))
+    sk, sv = sorted_view(eng.tree)
+    rng = np.random.default_rng(5)
+    q = _mixed_queries(keys, rng)
+    lo = rng.choice(np.concatenate([keys, keys + 1]), 256).astype(np.int32)
+    hi = (lo + rng.integers(-8, 300, size=256)).astype(np.int32)
+    tag = f"{cfg.name} kernel={use_kernel}"
+    for op in ("lookup", "predecessor", "successor"):
+        assert_op_matches(eng, sk, sv, op, q, msg=tag)
+    for op in ("range_count", "range_scan"):
+        assert_op_matches(eng, sk, sv, op, lo, hi, k=5, msg=tag)
+
+
+@pytest.mark.parametrize("cfg", MATRIX, ids=lambda c: c.name)
+def test_boundary_and_range_edges(cfg):
+    """Below-min / above-max keys, empty / gap / whole-tree ranges."""
+    keys, values = make_tree_data(500, seed=2)  # even keys 2..1000
+    eng = BSTEngine(keys, values, cfg)
+    sk, sv = sorted_view(eng.tree)
+    kmin, kmax = int(sk[0]), int(sk[-1])
+
+    # below min: no predecessor; above max: no successor
+    q = np.array([kmin - 10, kmin - 1, kmax + 1, kmax + 10], np.int32)
+    pk, pv, pok = eng.query("predecessor", q)
+    assert not pok[0] and not pok[1] and pk[0] == T.NO_PRED_KEY
+    assert pv[0] == T.SENTINEL_VALUE
+    assert pok[2] and pok[3] and pk[2] == kmax  # floor above max == max
+    skk, svv, sok = eng.query("successor", q)
+    assert sok[0] and skk[0] == kmin
+    assert not sok[2] and not sok[3] and skk[2] == T.NO_SUCC_KEY
+    assert_op_matches(eng, sk, sv, "predecessor", q)
+    assert_op_matches(eng, sk, sv, "successor", q)
+
+    lo = np.array([50, 51, kmin, kmax + 1, kmin - 5], np.int32)
+    hi = np.array([40, 51, kmax, kmax + 9, kmax + 5], np.int32)
+    counts = np.asarray(eng.query("range_count", lo, hi))
+    assert counts[0] == 0  # lo > hi: empty by clamping
+    assert counts[1] == 0  # odd singleton: gap range, no keys
+    assert counts[2] == sk.size  # whole tree
+    assert counts[3] == 0  # beyond max
+    assert counts[4] == sk.size  # superset of the key space
+    assert_op_matches(eng, sk, sv, "range_count", lo, hi)
+    assert_op_matches(eng, sk, sv, "range_scan", lo, hi, k=7)
+
+
+@pytest.mark.parametrize("strategy,n_trees", [("hrz", 1), ("dup", 4)])
+def test_single_node_tree(strategy, n_trees):
+    """height 0: the one stored key is its own floor/ceiling; hyb needs
+    height >= split and is covered at minimal height below."""
+    eng = BSTEngine(
+        np.array([100], np.int32),
+        np.array([7], np.int32),
+        EngineConfig(strategy=strategy, n_trees=n_trees),
+    )
+    sk, sv = sorted_view(eng.tree)
+    q = np.array([99, 100, 101], np.int32)
+    for op in ("lookup", "predecessor", "successor"):
+        assert_op_matches(eng, sk, sv, op, q)
+    lo = np.array([99, 100, 101], np.int32)
+    hi = np.array([101, 100, 99], np.int32)
+    counts = np.asarray(eng.query("range_count", lo, hi))
+    assert counts.tolist() == [1, 1, 0]
+    assert_op_matches(eng, sk, sv, "range_scan", lo, hi, k=2)
+
+
+def test_minimal_hyb_tree():
+    """The smallest tree a Hyb4 split fits (height 2): all ops, both paths."""
+    keys = np.arange(2, 16, 2, dtype=np.int32)  # 7 keys -> height 2
+    eng_cfg = EngineConfig(strategy="hyb", n_trees=4)
+    for use_kernel in (False, True):
+        eng = BSTEngine(
+            keys, keys * 3, dataclasses.replace(eng_cfg, use_kernel=use_kernel)
+        )
+        sk, sv = sorted_view(eng.tree)
+        q = np.arange(0, 18, dtype=np.int32)
+        for op in ("lookup", "predecessor", "successor"):
+            assert_op_matches(eng, sk, sv, op, q, msg=f"kernel={use_kernel}")
+        assert_op_matches(
+            eng, sk, sv, "range_count", q, q + 4, msg=f"kernel={use_kernel}"
+        )
+
+
+@pytest.mark.parametrize("cfg", MATRIX, ids=lambda c: c.name)
+def test_ordered_after_bulk_updates(cfg):
+    """Ranks, floors and scans re-align after bulk_insert + bulk_delete."""
+    keys, values = make_tree_data(400, seed=8)
+    tree = T.build_tree(keys, values)
+    tree = updates_lib.bulk_delete(tree, keys[100:200])
+    ins_k = np.arange(1, 101, 2, dtype=np.int32)  # odd keys: all new
+    tree = updates_lib.bulk_insert(tree, ins_k, ins_k * 5)
+    eng = BSTEngine.from_tree(tree, cfg)
+    sk, sv = sorted_view(tree)
+    rng = np.random.default_rng(9)
+    q = rng.choice(
+        np.concatenate([keys, ins_k, keys[100:200]]), 300
+    ).astype(np.int32)
+    for op in ("lookup", "predecessor", "successor"):
+        assert_op_matches(eng, sk, sv, op, q, msg=cfg.name)
+    hi = (q + rng.integers(0, 120, size=300)).astype(np.int32)
+    assert_op_matches(eng, sk, sv, "range_count", q, hi, msg=cfg.name)
+    assert_op_matches(eng, sk, sv, "range_scan", q, hi, k=6, msg=cfg.name)
+
+
+# ------------------------------------------------------------------ serving
+def test_server_typed_requests_and_per_op_accounting():
+    keys, values = make_tree_data(1000, seed=7)
+    srv = BSTServer(
+        keys, values, EngineConfig(strategy="hyb", n_trees=4), chunk_size=256,
+        scan_k=4,
+    )
+    sk, sv = sorted_view(srv.snapshot)
+    rng = np.random.default_rng(0)
+    q = rng.choice(np.concatenate([keys, keys + 1]), 517).astype(np.int32)
+    lo = rng.choice(keys, 300).astype(np.int32)
+    hi = (lo + rng.integers(0, 50, 300)).astype(np.int32)
+
+    t_look = srv.submit(q)
+    t_pred = srv.submit(q, op="predecessor")
+    t_cnt = srv.submit_range(lo, hi, op="range_count")
+    t_scan = srv.submit_range(lo, hi, op="range_scan")
+    t_succ = srv.submit(np.array([1], np.int32), op="successor")
+    assert srv.pending() == 517 * 2 + 300 * 2 + 1
+    res = srv.drain()
+    assert srv.pending() == 0
+
+    np.testing.assert_array_equal(res[t_look][0], oracle(sk, sv, "lookup", q)[0])
+    for got, want in zip(res[t_pred], oracle(sk, sv, "predecessor", q)):
+        np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(res[t_cnt][0], oracle(sk, sv, "range_count", lo, hi))
+    for got, want in zip(res[t_scan], oracle(sk, sv, "range_scan", lo, hi, k=4)):
+        np.testing.assert_array_equal(got, want)
+    skk, svv, sok = res[t_succ]
+    assert bool(sok[0]) and int(skk[0]) == int(sk[0])
+
+    s = srv.stats
+    assert s.requests == 5 and s.served == s.submitted == srv.stats.served
+    assert set(s.per_op) == {
+        "lookup", "predecessor", "successor", "range_count", "range_scan"
+    }
+    assert s.per_op["lookup"].served == 517
+    assert s.per_op["lookup"].chunks == -(-517 // 256)
+    assert s.per_op["range_scan"].served == 300
+    assert s.per_op["successor"].chunks == 1
+    assert s.chunks == sum(o.chunks for o in s.per_op.values())
+    assert s.found == int(oracle(sk, sv, "lookup", q)[1].sum())  # lookup hits only
+
+
+def test_server_ordered_sees_fresh_snapshot_after_swap():
+    keys, values = make_tree_data(300, seed=9)
+    srv = BSTServer(keys, values, chunk_size=64)
+    srv.apply_updates(
+        insert_keys=np.array([1], np.int32), insert_values=np.array([42], np.int32)
+    )
+    pk, pv, ok = srv.predecessor(np.array([1], np.int32))
+    assert bool(ok[0]) and int(pv[0]) == 42
+    assert int(srv.range_count(1, 1)[0]) == 1
+    K, V, taken = srv.range_scan(1, int(np.max(keys)))
+    assert int(taken[0]) == srv.scan_k  # bounded scan clips to k
+    assert int(K[0, 0]) == 1 and int(V[0, 0]) == 42
