@@ -4,13 +4,15 @@ This is the TPU-native performance plane (jit'd JAX); on the CPU container
 it measures real executed work, demonstrating the throughput ordering the
 partitioning strategies produce outside the cycle model.
 
-Rows come in three flavours per strategy: the jnp reference path for plain
+Rows come in four flavours per strategy: the jnp reference path for plain
 lookups over every paper key set, the ordered-query ops (predecessor /
-range_count / range_scan -- DESIGN.md §6) on the ``random`` set, and (at a
+range_count / range_scan -- DESIGN.md §6) on the ``random`` set, (at a
 smaller batch) the Pallas forest-kernel path (``use_kernel=True``), so the
 bench trajectory tracks the kernel the TPU actually runs and not just the
-oracle.  Interpret-mode kernel timings measure executed semantics on CPU,
-not TPU performance (DESIGN.md §2).
+oracle, and MIXED read/write streams (90/10 and 50/50) through
+``BSTServer``'s delta write path (DESIGN.md §7) -- the rows CI publishes
+to watch live-update serving throughput.  Interpret-mode kernel timings
+measure executed semantics on CPU, not TPU performance (DESIGN.md §2).
 """
 
 from __future__ import annotations
@@ -23,6 +25,7 @@ import numpy as np
 from benchmarks.common import Row, time_fn
 from repro.core.engine import BSTEngine, PAPER_CONFIGS
 from repro.data.keysets import make_key_sets, make_tree_data
+from repro.serving import BSTServer
 
 # Ordered ops benchmarked per strategy (lookup is the baseline row family).
 ORDERED_OPS = ("predecessor", "range_count", "range_scan")
@@ -104,4 +107,47 @@ def run(n_keys=(1 << 16) - 1, batch=16384, kernel_batch=2048) -> List[Row]:
                 ),
             )
         )
+
+    rows.extend(mixed_rw_rows(keys, values, batch=min(batch, 8192)))
+    return rows
+
+
+def mixed_rw_rows(keys, values, batch: int, rounds: int = 4) -> List[Row]:
+    """Mixed read/write serving throughput through the delta write path.
+
+    Each round submits an interleaved write batch + read batch to a
+    ``BSTServer`` whose engine carries a delta buffer (DESIGN.md §7), then
+    drains; ``keys_per_sec`` covers reads AND absorbed updates over
+    engine-busy time, with compaction cost included whenever the stream
+    trips the high-water mark.  One row per (mix, strategy).
+    """
+    rng = np.random.default_rng(7)
+    rows: List[Row] = []
+    for mix, write_frac in (("90_10", 0.10), ("50_50", 0.50)):
+        for name in ("Hrz", "Dup8", "Hyb8q"):
+            cfg = dataclasses.replace(PAPER_CONFIGS[name], delta_capacity=2048)
+            srv = BSTServer(keys, values, cfg, chunk_size=batch)
+            srv.warmup(("lookup",))
+            # warm the (padded, fixed-shape) ingest program too
+            srv.submit_write(np.int32(1), np.int32(1))
+            srv.drain()
+            srv.reset_stats()
+            n_w = int(batch * write_frac)
+            for _ in range(rounds):
+                wk = rng.integers(1, 2**20, n_w).astype(np.int32)
+                srv.submit_write(wk, wk)
+                srv.submit(rng.choice(keys, batch - n_w).astype(np.int32))
+                srv.drain()
+            s = srv.stats
+            rows.append(
+                Row(
+                    name=f"serve/mixed_{mix}/{name}",
+                    us_per_call=s.busy_s / rounds * 1e6,  # one mixed round
+                    derived=(
+                        f"keys_per_sec={s.keys_per_sec:.3e};batch={batch};"
+                        f"write_frac={write_frac};updates={s.updates};"
+                        f"compactions={s.compactions}"
+                    ),
+                )
+            )
     return rows

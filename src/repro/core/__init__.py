@@ -14,6 +14,7 @@ from repro.core.buffers import (
     queue_dispatch,
 )
 from repro.core.cyclesim import SimResult, run_paper_matrix, simulate
+from repro.core.delta import DeltaBuffer
 from repro.core.distributed import (
     make_distributed_lookup,
     make_distributed_query,
@@ -45,6 +46,7 @@ from repro.core.updates import bulk_delete, bulk_insert, sorted_view
 
 __all__ = [
     "BSTEngine",
+    "DeltaBuffer",
     "DispatchPlan",
     "EngineConfig",
     "NO_PRED_KEY",

@@ -36,6 +36,15 @@ epilogues are the plans-layer functions, and
 range_scan's sorted-view gather reads the host snapshot (the bounded ``k``
 columns are tiny next to the descent traffic).  ``make_distributed_lookup``
 and ``make_dup_lookup`` remain as membership shorthands.
+
+The live write path (DESIGN.md §7) extends the contract: ``run(op, ...,
+delta=...)`` takes a ``core.delta.DeltaBuffer`` of pending
+upserts/tombstones.  Like the register layer, the buffer is small and
+REPLICATED on every chip; its resolution composes with the packed
+``OrderedResult`` after the return collective (the kernel's jnp twin), and
+the ordered epilogues switch to rank selection over the merged key set --
+so every chip answers against snapshot + buffer without any extra
+collective.  Compaction swaps the snapshot exactly like a bulk rebuild.
 """
 
 from __future__ import annotations
@@ -50,6 +59,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.sharding.compat import shard_map
 
+from repro.core import delta as delta_lib
 from repro.core import plans as plans_lib
 from repro.core import tree as tree_lib
 from repro.core.tree import TreeData
@@ -98,21 +108,48 @@ def _make_query_runner(descend, tree: TreeData, rank_to_bfs: jax.Array):
     One implementation of the op dispatch (operand validation, lo||hi
     concat/split, per-op epilogues from core/plans) shared by the
     all_to_all and data-parallel engines, so the contract cannot drift
-    between them or from ``BSTEngine.query``.
+    between them or from ``BSTEngine.query``.  ``delta`` (a replicated
+    ``core.delta.DeltaBuffer``) folds the pending write buffer into the
+    descent results and switches the epilogues to their delta-aware twins
+    (DESIGN.md §7) -- the collectives themselves are untouched.
     """
+    sorted_cache: list = []  # built on the first delta call only
 
-    def run(op: str, queries, queries_hi=None, *, k: int = 8):
+    def _sorted_view():
+        if not sorted_cache:
+            sorted_cache.append((tree.keys[rank_to_bfs], tree.values[rank_to_bfs]))
+        return sorted_cache[0]
+
+    def run(op: str, queries, queries_hi=None, *, k: int = 8, delta=None):
         plans_lib.validate_op(op, queries_hi is not None)
         if op in plans_lib.RANGE_OPS:
             lo = jnp.asarray(queries, jnp.int32)
             hi = jnp.asarray(queries_hi, jnp.int32)
             B = lo.shape[0]
-            res = descend(jnp.concatenate([lo, hi]))
+            both = jnp.concatenate([lo, hi])
+            res = descend(both)
+            if delta is not None:
+                res = delta_lib.merge_ordered(
+                    res, *delta_lib.resolve(delta, both)
+                )
             r_lo = plans_lib.OrderedResult(*(f[:B] for f in res))
             r_hi = plans_lib.OrderedResult(*(f[B:] for f in res))
+            if delta is not None:
+                sorted_keys, sorted_values = _sorted_view()
+                return delta_lib.range_epilogue(
+                    op, sorted_keys, sorted_values, tree.n_real, delta,
+                    r_lo, r_hi, k=k,
+                )
             return plans_lib.range_epilogue(op, tree, rank_to_bfs, r_lo, r_hi, k=k)
         q = jnp.asarray(queries, jnp.int32)
-        return plans_lib.point_epilogue(op, q, descend(q))
+        res = descend(q)
+        if delta is not None:
+            sorted_keys, sorted_values = _sorted_view()
+            res = delta_lib.merge_ordered(res, *delta_lib.resolve(delta, q))
+            return delta_lib.point_epilogue(
+                op, q, res, sorted_keys, sorted_values, tree.n_real, delta
+            )
+        return plans_lib.point_epilogue(op, q, res)
 
     return run
 

@@ -39,8 +39,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import delta as delta_lib
 from repro.core import plans as plans_lib
 from repro.core import tree as tree_lib
+from repro.core import updates as updates_lib
 from repro.core.tree import TreeData
 
 
@@ -56,9 +58,20 @@ class EngineConfig:
     buffer_slack: float = 2.0
     use_kernel: bool = False  # route descent through the Pallas forest kernel
     interpret: bool = True  # Pallas interpret mode (CPU container)
+    # Live write path (DESIGN.md §7): > 0 attaches a delta buffer of that
+    # many slots to every query, enabling device-side apply_updates with
+    # bulk compaction at the high-water mark.  0 keeps the engine read-only
+    # (updates then mean a full snapshot rebuild, the pre-§7 story).
+    delta_capacity: int = 0
+    delta_high_water: Optional[int] = None  # default: 3/4 of the capacity
 
     def resolved_register_levels(self) -> int:
         return plans_lib.resolved_register_levels(self.n_trees, self.register_levels)
+
+    def resolved_high_water(self) -> int:
+        if self.delta_high_water is not None:
+            return self.delta_high_water
+        return max(1, (3 * self.delta_capacity) // 4)
 
     @property
     def name(self) -> str:
@@ -111,6 +124,16 @@ class BSTEngine:
             buffer_slack=cfg.buffer_slack,
         )
         self._query_cache: Dict[Tuple[str, int], callable] = {}
+        # Live write path (DESIGN.md §7): a fresh empty buffer per snapshot.
+        self.delta = (
+            delta_lib.empty(cfg.delta_capacity) if cfg.delta_capacity > 0 else None
+        )
+        self._ingest = jax.jit(self._ingest_step) if self.delta is not None else None
+        # Host-side occupancy upper bound (<= sum of batch sizes since the
+        # last compaction): the compaction trigger never syncs the device
+        # count scalar, at the cost of compacting a touch early.
+        self._pending_writes = 0
+        self.compactions = getattr(self, "compactions", 0)
 
     # ------------------------------------------------------------------ query
     def query(self, op: str, queries, queries_hi=None, *, k: int = 8):
@@ -144,14 +167,144 @@ class BSTEngine:
             )
             self._query_cache[key] = fn
         queries = jnp.asarray(queries, dtype=jnp.int32)
+        # The delta buffer is a traced argument (its arrays change per write
+        # batch but never in shape), so writes do not retrace queries.
+        kw = {} if self.delta is None else {"delta": self.delta}
         if op in plans_lib.RANGE_OPS:
-            return fn(queries, jnp.asarray(queries_hi, dtype=jnp.int32))
-        return fn(queries)
+            return fn(queries, jnp.asarray(queries_hi, dtype=jnp.int32), **kw)
+        return fn(queries, **kw)
 
     # ----------------------------------------------------------------- lookup
     def lookup(self, queries) -> Tuple[jax.Array, jax.Array]:
         """(values, found) for a 1-D int32 query batch."""
         return self.query("lookup", queries)
+
+    # ------------------------------------------------------------------ write
+    def _ingest_step(self, delta, keys, values, deletes, valid):
+        """One write-batch ingest (jitted in ``_finalize``; jax caches one
+        trace per batch shape automatically).
+
+        The batch descends the engine's OWN datapath (same plan, same
+        kernel/reference choice as queries) to classify each key against
+        the snapshot, then merges into the sorted buffer -- pure jnp end
+        to end, so updates never leave the device (DESIGN.md §7).
+        """
+        res = plans_lib.execute_plan_ordered(
+            self.plan,
+            keys,
+            use_kernel=self.config.use_kernel,
+            interpret=self.config.interpret,
+        )
+        return delta_lib.ingest(
+            delta, keys, values, deletes, valid, res.found, res.rank
+        )
+
+    def apply_ops(self, keys, values, deletes, valid=None) -> None:
+        """Apply a mixed batch of upserts/tombstones in submission order.
+
+        ``keys``/``values`` are int32 arrays, ``deletes`` a bool mask
+        (True = tombstone; the value lane is ignored), ``valid`` an
+        optional bool mask for padding lanes (fixed jit shapes upstream).
+        Requires ``delta_capacity > 0``.  The buffer absorbs the batch on
+        device; compaction (a bulk merge into a fresh snapshot) triggers
+        when occupancy would exceed the capacity or crosses the high-water
+        mark -- never mid-batch, so readers always see a consistent
+        snapshot + buffer pair.
+        """
+        if self.delta is None:
+            raise ValueError(
+                "write path disabled: construct the engine with "
+                "EngineConfig(delta_capacity > 0), or use core.updates "
+                "bulk maintenance + snapshot swap"
+            )
+        keys = np.atleast_1d(np.asarray(keys, np.int32))
+        values = np.atleast_1d(np.asarray(values, np.int32))
+        deletes = np.atleast_1d(np.asarray(deletes, bool))
+        if not (keys.shape == values.shape == deletes.shape) or keys.ndim != 1:
+            raise ValueError("keys/values/deletes must be equal-length 1-D")
+        valid = (
+            np.ones(keys.shape, bool)
+            if valid is None
+            else np.atleast_1d(np.asarray(valid, bool))
+        )
+        cap = self.config.delta_capacity
+        high = self.config.resolved_high_water()
+        for lo in range(0, keys.size, cap):
+            sl = slice(lo, lo + cap)
+            m = int(valid[sl].sum())
+            if m == 0:
+                continue
+            if self._pending_writes + m > cap:
+                self.compact()
+            self.delta = self._ingest(
+                self.delta,
+                jnp.asarray(keys[sl]),
+                jnp.asarray(values[sl]),
+                jnp.asarray(deletes[sl]),
+                jnp.asarray(valid[sl]),
+            )
+            self._pending_writes += m
+        if self._pending_writes >= high:
+            self.compact()
+
+    def apply_updates(
+        self, insert_keys=None, insert_values=None, delete_keys=None
+    ) -> TreeData:
+        """Insert/delete convenience over ``apply_ops`` (deletes first, so
+        an upsert of a just-deleted key lands -- the historical contract).
+
+        With the write path enabled the batch lands in the delta buffer
+        and the snapshot only changes at compaction; without it, falls
+        back to ``core.updates`` bulk maintenance (full rebuild).  Returns
+        the current snapshot either way.
+        """
+        dk = np.atleast_1d(np.asarray(delete_keys, np.int32)) if (
+            delete_keys is not None and len(np.atleast_1d(delete_keys))
+        ) else np.empty(0, np.int32)
+        ik = np.atleast_1d(np.asarray(insert_keys, np.int32)) if (
+            insert_keys is not None and len(np.atleast_1d(insert_keys))
+        ) else np.empty(0, np.int32)
+        if ik.size and insert_values is None:
+            raise ValueError("insert_keys needs insert_values")
+        iv = (
+            np.atleast_1d(np.asarray(insert_values, np.int32))
+            if ik.size
+            else np.empty(0, np.int32)
+        )
+        if self.delta is None:
+            tree = self.tree
+            if dk.size:
+                tree = updates_lib.bulk_delete(tree, dk)
+            if ik.size:
+                tree = updates_lib.bulk_insert(tree, ik, iv)
+            self.tree = tree
+            self._finalize()
+            return tree
+        keys = np.concatenate([dk, ik])
+        values = np.concatenate([np.zeros(dk.size, np.int32), iv])
+        deletes = np.concatenate([np.ones(dk.size, bool), np.zeros(ik.size, bool)])
+        if keys.size:
+            self.apply_ops(keys, values, deletes)
+        return self.tree
+
+    def compact(self) -> TreeData:
+        """Absorb the delta buffer into a fresh perfect snapshot.
+
+        Device-side merge + Eytzinger re-layout (one host sync for the new
+        key count, which fixes the static height); the plan and jit caches
+        rebuild against the new snapshot, and the buffer comes back empty.
+        No-op while nothing is buffered.
+        """
+        if self.delta is None or self._pending_writes == 0:
+            return self.tree
+        self.tree = delta_lib.compact(self.tree, self.delta)
+        self.compactions += 1
+        self._finalize()
+        return self.tree
+
+    def pending_writes(self) -> int:
+        """Upper bound on buffered entries (0 right after a compaction)."""
+        return self._pending_writes
 
     # ------------------------------------------------------------- accounting
     def memory_nodes(self) -> int:

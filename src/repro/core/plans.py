@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import buffers as buf
+from repro.core import delta as delta_lib
 from repro.core import tree as tree_lib
 from repro.core.tree import OrderedResult, TreeData
 from repro.kernels import ops as kops
@@ -66,7 +67,9 @@ class SearchPlan:
     register-layer route -> buffer dispatch pipeline (hyb).  ``full_tree``
     (every strategy) backs hyb's stall-round oracle and the ordered ops'
     sorted-view gathers; ``rank_to_bfs`` maps in-order rank -> BFS index so
-    range_scan reads consecutive ranks straight out of the flat layout.
+    range_scan reads consecutive ranks straight out of the flat layout
+    (the delta epilogues' sorted view is the same gather, traced on demand
+    inside ``ordered_query`` so read-only plans never materialize it).
     """
 
     strategy: str  # hrz | dup | hyb
@@ -82,6 +85,14 @@ class SearchPlan:
     reg_values: Optional[jax.Array] = None
     full_tree: Optional[TreeData] = None
     rank_to_bfs: Optional[jax.Array] = None
+
+    def sorted_view(self) -> Tuple[jax.Array, jax.Array]:
+        """The snapshot's sorted key/value view (one gather; under ``jit``
+        both inputs are constants, so XLA folds it at compile time)."""
+        return (
+            self.full_tree.keys[self.rank_to_bfs],
+            self.full_tree.values[self.rank_to_bfs],
+        )
 
     def memory_nodes(self) -> int:
         """Stored nodes (the paper's Fig. 8 memory metric)."""
@@ -245,13 +256,15 @@ def descend_phase(
     shared_tree: bool = False,
     use_kernel: bool = False,
     interpret: bool = True,
+    delta: Optional[Tuple[jax.Array, ...]] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Forest-batched compare-descend: (n_trees, B) queries in one shot.
 
     ``use_kernel=True`` lowers to the single forest ``pallas_call``;
     otherwise the vmapped jnp oracle runs (bit-identical by property test).
     Both paths live behind ``kernels.ops.bst_search_forest`` so the
-    forest-batching shape handling exists exactly once.
+    forest-batching shape handling exists exactly once.  ``delta`` rides
+    the write buffer's flat operands on either path (DESIGN.md §7).
     """
     return kops.bst_search_forest(
         forest_keys,
@@ -262,6 +275,7 @@ def descend_phase(
         interpret=interpret,
         shared_tree=shared_tree,
         use_ref=not use_kernel,
+        delta=delta,
     )
 
 
@@ -275,12 +289,15 @@ def descend_phase_ordered(
     shared_tree: bool = False,
     use_kernel: bool = False,
     interpret: bool = True,
+    delta: Optional[Tuple[jax.Array, ...]] = None,
 ) -> OrderedResult:
     """Ordered forest-batched compare-descend (DESIGN.md §6).
 
     Same single-``pallas_call`` lowering as ``descend_phase``; the extra
     outputs (strict predecessor/successor ancestors, rank boundary) fall out
-    of the same pipelined descent.  Fields are (n_trees, B).
+    of the same pipelined descent.  Fields are (n_trees, B).  With
+    ``delta`` the write buffer rides the call and value/found/rank come
+    back merged (DESIGN.md §7).
     """
     out = kops.bst_ordered_forest(
         forest_keys,
@@ -291,6 +308,7 @@ def descend_phase_ordered(
         interpret=interpret,
         shared_tree=shared_tree,
         use_ref=not use_kernel,
+        delta=delta,
     )
     return OrderedResult(*out)
 
@@ -376,14 +394,24 @@ def execute_plan_ordered(
     *,
     use_kernel: bool = False,
     interpret: bool = True,
+    delta: Optional[delta_lib.DeltaBuffer] = None,
 ) -> OrderedResult:
     """The single-chip driver: one ordered pass through the plan's phases.
 
     Returns the full per-query ``OrderedResult`` -- the common substrate
     every query op's epilogue reads (``ordered_query``).  All strategies
     descend through the one forest-batched kernel / oracle.
+
+    With ``delta`` (DESIGN.md §7) value/found/rank come back merged
+    against the pending write buffer.  For hrz/dup every query occupies
+    exactly one kernel lane, so the buffer rides the ``pallas_call``
+    itself; under hybrid partitioning a query's path is split between the
+    register layer and one subtree (plus the stall round), so the buffer
+    resolution composes once at this driver level instead -- same math,
+    the kernel's jnp twin (``delta_lib.resolve``).
     """
     B = queries.shape[0]
+    d_ops = None if delta is None else delta_lib.operands(delta)
     if plan.strategy == "hrz":
         res = descend_phase_ordered(
             plan.forest_keys,
@@ -392,6 +420,7 @@ def execute_plan_ordered(
             queries[None, :],
             use_kernel=use_kernel,
             interpret=interpret,
+            delta=d_ops,
         )
         return OrderedResult(*(f[0] for f in res))
 
@@ -408,6 +437,7 @@ def execute_plan_ordered(
             shared_tree=True,
             use_kernel=use_kernel,
             interpret=interpret,
+            delta=d_ops,
         )
         return OrderedResult(*(f.reshape(-1)[:B] for f in res))
 
@@ -440,7 +470,10 @@ def execute_plan_ordered(
         full = tree_lib.search_reference_ordered(plan.full_tree, queries)
         return where_ordered(dplan.overflow, full, res)
 
-    return jax.lax.cond(jnp.any(dplan.overflow), retry, lambda r: r, res)
+    res = jax.lax.cond(jnp.any(dplan.overflow), retry, lambda r: r, res)
+    if delta is None:
+        return res
+    return delta_lib.merge_ordered(res, *delta_lib.resolve(delta, queries))
 
 
 def execute_plan(
@@ -449,13 +482,17 @@ def execute_plan(
     *,
     use_kernel: bool = False,
     interpret: bool = True,
+    delta: Optional[delta_lib.DeltaBuffer] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Membership lookup through the kernel's 2-output configuration.
 
     Same phase chain as ``execute_plan_ordered`` but none of the ordered
     tracking -- the hot lookup path pays nothing for the §6 datapath.
+    ``delta`` composes exactly as in the ordered driver: in-kernel for
+    hrz/dup, at this driver level for hyb (DESIGN.md §7).
     """
     B = queries.shape[0]
+    d_ops = None if delta is None else delta_lib.operands(delta)
     if plan.strategy == "hrz":
         val, found = descend_phase(
             plan.forest_keys,
@@ -464,6 +501,7 @@ def execute_plan(
             queries[None, :],
             use_kernel=use_kernel,
             interpret=interpret,
+            delta=d_ops,
         )
         return val[0], found[0]
 
@@ -479,6 +517,7 @@ def execute_plan(
             shared_tree=True,
             use_kernel=use_kernel,
             interpret=interpret,
+            delta=d_ops,
         )
         return val.reshape(-1)[:B], found.reshape(-1)[:B]
 
@@ -510,7 +549,13 @@ def execute_plan(
         found = jnp.where(dplan.overflow, r_found, found)
         return val, found
 
-    return jax.lax.cond(jnp.any(dplan.overflow), retry, lambda a: a, (val, found))
+    val, found = jax.lax.cond(
+        jnp.any(dplan.overflow), retry, lambda a: a, (val, found)
+    )
+    if delta is None:
+        return val, found
+    hit, dead, d_val, _ = delta_lib.resolve(delta, queries)
+    return delta_lib.merge_lookup(val, found, hit, dead, d_val)
 
 
 def ordered_query(
@@ -522,6 +567,7 @@ def ordered_query(
     k: int = 8,
     use_kernel: bool = False,
     interpret: bool = True,
+    delta: Optional[delta_lib.DeltaBuffer] = None,
 ):
     """The per-op query contract (DESIGN.md §6) -- one descent, one epilogue.
 
@@ -539,13 +585,20 @@ def ordered_query(
     bounds must be strictly inside (NO_PRED_KEY, SENTINEL_KEY); when ``ok``
     is False the key output is NO_PRED_KEY / NO_SUCC_KEY and the value
     SENTINEL_VALUE.
+
+    With ``delta`` (the live write path, DESIGN.md §7) the same descent
+    resolves the pending upserts/tombstones, and every epilogue switches to
+    its delta-aware twin in ``core/delta.py`` -- rank selection over the
+    merged key set instead of the static rank -> BFS map.  An empty buffer
+    degenerates to the classic answers bit-for-bit, so one compiled
+    function serves the engine before and after writes land.
     """
     validate_op(op, queries_hi is not None)
 
     if op == "lookup":
         # The hot membership path: same phases, 2-output kernel config.
         return execute_plan(
-            plan, queries, use_kernel=use_kernel, interpret=interpret
+            plan, queries, use_kernel=use_kernel, interpret=interpret, delta=delta
         )
 
     if op in RANGE_OPS:
@@ -556,16 +609,40 @@ def ordered_query(
             jnp.concatenate([lo, hi]),
             use_kernel=use_kernel,
             interpret=interpret,
+            delta=delta,
         )
         r_lo = OrderedResult(*(f[:B] for f in res))
         r_hi = OrderedResult(*(f[B:] for f in res))
+        if delta is not None:
+            sorted_keys, sorted_values = plan.sorted_view()
+            return delta_lib.range_epilogue(
+                op,
+                sorted_keys,
+                sorted_values,
+                plan.full_tree.n_real,
+                delta,
+                r_lo,
+                r_hi,
+                k=k,
+            )
         return range_epilogue(
             op, plan.full_tree, plan.rank_to_bfs, r_lo, r_hi, k=k
         )
 
     res = execute_plan_ordered(
-        plan, queries, use_kernel=use_kernel, interpret=interpret
+        plan, queries, use_kernel=use_kernel, interpret=interpret, delta=delta
     )
+    if delta is not None:
+        sorted_keys, sorted_values = plan.sorted_view()
+        return delta_lib.point_epilogue(
+            op,
+            queries,
+            res,
+            sorted_keys,
+            sorted_values,
+            plan.full_tree.n_real,
+            delta,
+        )
     return point_epilogue(op, queries, res)
 
 

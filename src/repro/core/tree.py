@@ -18,6 +18,7 @@ stream of infinite keys").
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple, Tuple
 
 import jax
@@ -230,13 +231,16 @@ def left_subtree_sizes(height: int) -> np.ndarray:
     return ((1 << (height - levels)) - 1).astype(np.int32)
 
 
+@functools.lru_cache(maxsize=None)
 def rank_to_bfs_indices(height: int) -> np.ndarray:
     """BFS index of every in-order rank (the sorted view of the layout).
 
     Inverts ``rank = (2p + 1) * 2^{H-l} - 1``: with ``t = rank + 1``, the
     number of trailing zero bits of ``t`` is ``H - l`` and the remaining odd
     factor is ``2p + 1``.  range_scan gathers consecutive ranks through this
-    map instead of re-sorting (DESIGN.md §6).
+    map instead of re-sorting (DESIGN.md §6).  Memoized per height (callers
+    treat the array as read-only): compaction runs in the serving steady
+    state and must not rebuild O(n) host maps per swap.
     """
     n = (1 << (height + 1)) - 1
     t = np.arange(1, n + 1, dtype=np.int64)
@@ -244,6 +248,58 @@ def rank_to_bfs_indices(height: int) -> np.ndarray:
     level = height - z
     offset = ((t >> z) - 1) >> 1
     return (((1 << level) - 1) + offset).astype(np.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def bfs_inorder_ranks(height: int) -> np.ndarray:
+    """In-order rank of every BFS index (inverse of ``rank_to_bfs_indices``).
+
+    The node at level ``l`` offset ``p`` has rank ``(2p + 1) * 2^{H-l} - 1``.
+    Gathering a sorted array through this map IS the Eytzinger layout step --
+    the device-side re-layout that ``layout_from_sorted_device`` (and the
+    delta-compaction path, DESIGN.md §7) runs under ``jit``.  Memoized per
+    height like its inverse (read-only contract).
+    """
+    n = (1 << (height + 1)) - 1
+    out = np.empty(n, dtype=np.int32)
+    for l in range(height + 1):
+        p = np.arange(1 << l)
+        o = level_offset(l)
+        out[o : o + (1 << l)] = (2 * p + 1) * (1 << (height - l)) - 1
+    return out
+
+
+def layout_from_sorted_device(
+    sorted_keys: jax.Array, sorted_values: jax.Array, n_real: int
+) -> TreeData:
+    """Build a TreeData from a DEVICE-resident sorted view (one gather).
+
+    ``sorted_keys/values`` hold ``n_real`` real pairs in ascending key order
+    followed by sentinel padding (any length >= n_real).  The perfect-tree
+    height is derived from ``n_real`` (a host int -- the one scalar the
+    delta write path syncs per compaction, DESIGN.md §7); the BFS image is a
+    single gather through ``bfs_inorder_ranks``, so the arrays never leave
+    the device.
+    """
+    if n_real < 1:
+        raise ValueError("empty tree")
+    h = height_for(n_real)
+    n = (1 << (h + 1)) - 1
+    pad = n - int(sorted_keys.shape[0])
+    if pad > 0:
+        sorted_keys = jnp.concatenate(
+            [sorted_keys, jnp.full((pad,), SENTINEL_KEY, jnp.int32)]
+        )
+        sorted_values = jnp.concatenate(
+            [sorted_values, jnp.full((pad,), SENTINEL_VALUE, jnp.int32)]
+        )
+    ranks = jnp.asarray(bfs_inorder_ranks(h))
+    return TreeData(
+        keys=sorted_keys[:n][ranks],
+        values=sorted_values[:n][ranks],
+        height=h,
+        n_real=n_real,
+    )
 
 
 def _ordered_step(keys, values, queries, active, idx_clamp):

@@ -13,13 +13,26 @@ The TPU-native rendition is BULK maintenance, the standard LSM-ish trade:
     CPU would do.
   * ``bulk_delete``: mask + compact + re-layout.
 
+Since the delta write path landed (DESIGN.md §7) both are thin wrappers
+over ``core/delta.py``: the batch is ingested into a transient
+batch-sized delta buffer (one ordered descent classifies each key) and
+immediately compacted -- searchsorted merge plus Eytzinger re-layout, all
+pure jnp under ``jit``, with a single host sync for the new key count
+(it fixes the fresh snapshot's static height).  The host-side NumPy merge
+this module used to carry is gone; only input validation runs on host.
+Compile-cost caveat: the jitted programs specialize on (tree size, batch
+size), which change across snapshot swaps, so a long stream of bulk calls
+retraces per shape -- this is the COLD maintenance path by design; a
+continuous write stream belongs on ``BSTEngine.apply_updates``, whose
+fixed-shape delta ingest compiles once (DESIGN.md §7).
+
 Both return a fresh TreeData; the engine strategies (and the forest-batched
 flat Pallas kernel) consume the result unchanged, because every layout
 invariant -- including the sorted in-order view that the ordered query ops'
-rank arithmetic reads (DESIGN.md §6) -- is re-established by construction.
-Throughput-wise this matches the paper's deployment story: search streams
-are served from immutable snapshots; updates land in batches between
-snapshot swaps.
+rank arithmetic reads (DESIGN.md §6) -- is re-established by construction
+(asserted by the compaction-invariant tests in ``tests/test_updates.py``).
+Throughput-wise this remains the snapshot-swap deployment story; the
+continuous-write story is ``BSTEngine.apply_updates`` (DESIGN.md §7).
 
 Duplicate-key policy: an inserted key that already exists REPLACES the
 stored value (upsert), matching map semantics used by the lookup tests.
@@ -27,12 +40,14 @@ stored value (upsert), matching map semantics used by the lookup tests.
 
 from __future__ import annotations
 
+import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import delta as delta_lib
 from repro.core import tree as tree_lib
 from repro.core.tree import TreeData
 
@@ -46,45 +61,74 @@ def sorted_view(tree: TreeData) -> Tuple[np.ndarray, np.ndarray]:
     return keys[real][order], values[real][order]
 
 
+@functools.partial(jax.jit, static_argnames=("height", "n_real"))
+def _ingest_batch(
+    tree_keys: jax.Array,
+    tree_values: jax.Array,
+    height: int,
+    n_real: int,
+    keys: jax.Array,
+    values: jax.Array,
+    deletes: jax.Array,
+) -> delta_lib.DeltaBuffer:
+    """Classify one write batch against the snapshot and buffer it.
+
+    One ordered descent yields each key's membership + rank (the delta
+    entry metadata, DESIGN.md §7); ``ingest`` then sorts and dedups the
+    batch last-wins.  Fully on device.
+    """
+    tree = TreeData(tree_keys, tree_values, height, n_real)
+    res = tree_lib.search_reference_ordered(tree, keys)
+    return delta_lib.ingest(
+        delta_lib.empty(keys.shape[0]),
+        keys,
+        values,
+        deletes,
+        jnp.ones(keys.shape, bool),
+        res.found,
+        res.rank,
+    )
+
+
+def _apply_batch(tree: TreeData, keys, values, deletes) -> TreeData:
+    d = _ingest_batch(
+        tree.keys,
+        tree.values,
+        tree.height,
+        tree.n_real,
+        jnp.asarray(keys, jnp.int32),
+        jnp.asarray(values, jnp.int32),
+        jnp.asarray(deletes, bool),
+    )
+    return delta_lib.compact(tree, d)
+
+
 def bulk_insert(tree: TreeData, new_keys, new_values) -> TreeData:
     """Upsert a batch of pairs; returns a freshly laid-out perfect tree."""
     new_keys = np.asarray(new_keys, dtype=np.int32)
     new_values = np.asarray(new_values, dtype=np.int32)
     if new_keys.ndim != 1 or new_keys.shape != new_values.shape:
         raise ValueError("new_keys/new_values must be equal-length 1-D")
-    order = np.argsort(new_keys, kind="stable")
-    nk, nv = new_keys[order], new_values[order]
-    # last occurrence wins within the batch (upsert semantics)
-    keep = np.ones(nk.size, bool)
-    keep[:-1] = nk[:-1] != nk[1:]
-    nk, nv = nk[keep], nv[keep]
-
-    ok, ov = sorted_view(tree)
-    # drop old pairs that are being replaced
-    replaced = np.isin(ok, nk, assume_unique=True)
-    ok, ov = ok[~replaced], ov[~replaced]
-
-    # vectorized merge by rank arithmetic: position of each element in the
-    # merged array = own index + count of smaller elements in the other set
-    pos_old = np.arange(ok.size) + np.searchsorted(nk, ok, side="left")
-    pos_new = np.arange(nk.size) + np.searchsorted(ok, nk, side="left")
-    total = ok.size + nk.size
-    mk = np.empty(total, np.int32)
-    mv = np.empty(total, np.int32)
-    mk[pos_old], mv[pos_old] = ok, ov
-    mk[pos_new], mv[pos_new] = nk, nv
-
-    bfs_k, bfs_v, h, n_real = tree_lib.eytzinger_from_sorted(mk, mv)
-    return TreeData(jnp.asarray(bfs_k), jnp.asarray(bfs_v), h, n_real)
+    if new_keys.size == 0:
+        return tree
+    return _apply_batch(tree, new_keys, new_values, np.zeros(new_keys.size, bool))
 
 
 def bulk_delete(tree: TreeData, del_keys) -> TreeData:
-    """Remove a batch of keys (absent keys are ignored)."""
-    del_keys = np.unique(np.asarray(del_keys, dtype=np.int32))
-    ok, ov = sorted_view(tree)
-    keep = ~np.isin(ok, del_keys, assume_unique=True)
-    ok, ov = ok[keep], ov[keep]
-    if ok.size == 0:
-        raise ValueError("bulk_delete would empty the tree")
-    bfs_k, bfs_v, h, n_real = tree_lib.eytzinger_from_sorted(ok, ov)
-    return TreeData(jnp.asarray(bfs_k), jnp.asarray(bfs_v), h, n_real)
+    """Remove a batch of keys (absent keys are ignored; scalars accepted)."""
+    del_keys = np.atleast_1d(np.asarray(del_keys, dtype=np.int32))
+    if del_keys.ndim != 1:
+        raise ValueError("del_keys must be scalar or 1-D")
+    if del_keys.size == 0:
+        return tree
+    try:
+        return _apply_batch(
+            tree,
+            del_keys,
+            np.zeros(del_keys.size, np.int32),
+            np.ones(del_keys.size, bool),
+        )
+    except ValueError as e:
+        if "empty the tree" in str(e):
+            raise ValueError("bulk_delete would empty the tree") from None
+        raise

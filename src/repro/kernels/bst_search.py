@@ -87,13 +87,22 @@ def _forest_search_kernel(
     flat_v_ref,
     q_ref,
     act_ref,
-    *out_refs,
+    *rest_refs,
     register_levels: int,
     height: int,
     ordered: bool,
+    with_delta: bool,
 ):
     """ONE kernel body for both configurations of the datapath: membership
-    (2 output refs) and ordered (7 output refs, DESIGN.md §6)."""
+    (2 output refs) and ordered (7 output refs, DESIGN.md §6).  With
+    ``with_delta`` (a Python flag, like ``ordered``) four extra operand
+    refs precede the outputs: the sorted delta buffer of pending
+    upserts/tombstones (DESIGN.md §7), resolved in the same pass."""
+    if with_delta:
+        dk_ref, dv_ref, dt_ref, dw_ref = rest_refs[:4]
+        out_refs = rest_refs[4:]
+    else:
+        out_refs = rest_refs
     q = q_ref[0, :]
     active = act_ref[0, :] != 0
     state = (
@@ -125,6 +134,27 @@ def _forest_search_kernel(
         )
 
     _, val, found, pk, pv, sk, sv, rank = state
+
+    if with_delta:
+        # --- delta buffer: one broadcast compare against the sorted side
+        # structure (the write path's "extra operand", DESIGN.md §7).
+        # delta-hit > tombstone > tree-hit; the signed weights below each
+        # query correct the rank to the MERGED key set.  pred/succ stay
+        # tree-local: the exact merged floor/ceiling is rank selection in
+        # the epilogue (core/delta.py), not a descent concern.
+        dk = dk_ref[0, :]
+        dv = dv_ref[0, :]
+        eq = q[:, None] == dk[None, :]
+        hit = jnp.any(eq, axis=1) & active
+        d_val = jnp.sum(jnp.where(eq, dv[None, :], 0), axis=1)
+        dead = jnp.sum(jnp.where(eq, dt_ref[0, :][None, :], 0), axis=1) != 0
+        val = jnp.where(hit, jnp.where(dead, SENTINEL_VALUE, d_val), val)
+        found = jnp.where(hit, ~dead, found)
+        if ordered:
+            lt = dk[None, :] < q[:, None]
+            w_below = jnp.sum(jnp.where(lt, dw_ref[0, :][None, :], 0), axis=1)
+            rank = rank + jnp.where(active, w_below, 0)
+
     outs = (val, found.astype(jnp.int32))
     if ordered:
         outs = outs + (pk, pv, sk, sv, rank)
@@ -143,6 +173,7 @@ def bst_ordered_forest_pallas(
     interpret: bool = True,
     shared_tree: bool = False,
     ordered: bool = True,
+    delta: Optional[Tuple[jax.Array, ...]] = None,
 ) -> Tuple[jax.Array, ...]:
     """Ordered search over a forest of BFS-layout trees in ONE ``pallas_call``.
 
@@ -151,11 +182,18 @@ def bst_ordered_forest_pallas(
     ``shared_tree=True`` the operand has one row that every grid row reads
     (duplicated partitioning -- replication without materialisation).
 
+    ``delta`` optionally rides the delta write buffer (DESIGN.md §7) as
+    four extra (C,) int32 operands -- sorted keys, values, tombstone flags,
+    signed rank weights -- shared by every grid cell like the register
+    block.  Each lane then resolves ``delta-hit > tombstone > tree-hit``
+    and corrects its rank to the merged key set, still in the same pass.
+
     Returns per-lane (n_trees, B) arrays
     ``(values, found, pred_keys, pred_values, succ_keys, succ_values, rank)``
     -- the ordered contract of DESIGN.md §6: strict predecessor/successor
     ancestors (NO_PRED_KEY / NO_SUCC_KEY when absent) and the count of
-    stored keys strictly below each query.
+    stored keys strictly below each query (with ``delta``: value/found/rank
+    are merged; pred/succ remain tree-local, see ``core/delta.py``).
     """
     if forest_keys.ndim != 2 or queries.ndim != 2:
         raise ValueError("forest operands and queries must be 2-D")
@@ -185,32 +223,42 @@ def bst_ordered_forest_pallas(
         register_levels=register_levels,
         height=height,
         ordered=ordered,
+        with_delta=delta is not None,
     )
-    n_out = 7 if ordered else 2
-    out_spec = pl.BlockSpec((1, block_q), chunk_map)
-    out_shape = jax.ShapeDtypeStruct(qp.shape, jnp.int32)
-    outs = pl.pallas_call(
-        kernel,
-        grid=(T, nq),
-        in_specs=[
-            pl.BlockSpec((1, reg_n), tree_map),
-            pl.BlockSpec((1, reg_n), tree_map),
-            pl.BlockSpec((1, n), tree_map),
-            pl.BlockSpec((1, n), tree_map),
-            pl.BlockSpec((1, block_q), chunk_map),
-            pl.BlockSpec((1, block_q), chunk_map),
-        ],
-        out_specs=[out_spec] * n_out,
-        out_shape=[out_shape] * n_out,
-        interpret=interpret,
-    )(
+    in_specs = [
+        pl.BlockSpec((1, reg_n), tree_map),
+        pl.BlockSpec((1, reg_n), tree_map),
+        pl.BlockSpec((1, n), tree_map),
+        pl.BlockSpec((1, n), tree_map),
+        pl.BlockSpec((1, block_q), chunk_map),
+        pl.BlockSpec((1, block_q), chunk_map),
+    ]
+    operands = [
         forest_keys[:, :reg_n],
         forest_values[:, :reg_n],
         forest_keys,
         forest_values,
         qp,
         ap,
-    )
+    ]
+    if delta is not None:
+        shared_map = lambda t, i: (0, 0)  # noqa: E731 -- one buffer, all cells
+        for arr in delta:
+            if arr.ndim != 1:
+                raise ValueError("delta operands must be 1-D (C,) arrays")
+            in_specs.append(pl.BlockSpec((1, arr.shape[0]), shared_map))
+            operands.append(arr.astype(jnp.int32)[None, :])
+    n_out = 7 if ordered else 2
+    out_spec = pl.BlockSpec((1, block_q), chunk_map)
+    out_shape = jax.ShapeDtypeStruct(qp.shape, jnp.int32)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(T, nq),
+        in_specs=in_specs,
+        out_specs=[out_spec] * n_out,
+        out_shape=[out_shape] * n_out,
+        interpret=interpret,
+    )(*operands)
     outs = tuple(o[:, :B] for o in outs)
     return (outs[0], outs[1] != 0) + outs[2:]
 
@@ -225,12 +273,15 @@ def bst_search_forest_pallas(
     block_q: int = 512,
     interpret: bool = True,
     shared_tree: bool = False,
+    delta: Optional[Tuple[jax.Array, ...]] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Membership search: the same kernel body in its 2-output configuration.
 
     Returns (values, found), each (n_trees, B).  One ``pallas_call``; the
     unroll skips the ordered tracking entirely (``ordered=False`` is a
-    Python flag), so lookups pay nothing for the §6 datapath.
+    Python flag), so lookups pay nothing for the §6 datapath.  ``delta``
+    rides the write buffer exactly as in the ordered configuration (minus
+    the rank correction, which membership search does not track).
     """
     out = bst_ordered_forest_pallas(
         forest_keys,
@@ -243,6 +294,7 @@ def bst_search_forest_pallas(
         interpret=interpret,
         shared_tree=shared_tree,
         ordered=False,
+        delta=delta,
     )
     return out[0], out[1]
 

@@ -46,12 +46,15 @@ def bst_search_forest(
     interpret: bool = True,
     shared_tree: bool = False,
     use_ref: bool = False,
+    delta: Optional[Tuple[jax.Array, ...]] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Forest-batched search: (n_trees, B) queries over (n_rows, n) flat trees.
 
     The single entry point behind every engine strategy (DESIGN.md §2): hrz
     is a forest of one, dup shares one tree row across grid rows, hyb gives
     each vertical subtree its own row.  One ``pallas_call`` for all three.
+    ``delta`` optionally rides the write buffer's four flat operands
+    (DESIGN.md §7) on either path; value/found come back merged.
     """
     if use_ref:
         T = queries.shape[0]
@@ -62,9 +65,16 @@ def bst_search_forest(
             fv = jnp.broadcast_to(fv, (T,) + fv.shape[1:])
         if active is None:
             active = jnp.ones(queries.shape, bool)
-        return jax.vmap(
+        val, found = jax.vmap(
             lambda k, v, q, a: ref.bst_search_ref(k, v, q, height, a)
         )(fk, fv, queries, active)
+        if delta is not None:
+            hit, dead, d_val, _ = ref.bst_delta_resolve_ref(
+                *delta, queries, active
+            )
+            val = jnp.where(hit, jnp.where(dead, ref.SENTINEL_VALUE, d_val), val)
+            found = jnp.where(hit, ~dead, found)
+        return val, found
     return bst_search_forest_pallas(
         forest_keys,
         forest_values,
@@ -75,6 +85,7 @@ def bst_search_forest(
         block_q=block_q,
         interpret=interpret,
         shared_tree=shared_tree,
+        delta=delta,
     )
 
 
@@ -100,6 +111,7 @@ def bst_ordered_forest(
     interpret: bool = True,
     shared_tree: bool = False,
     use_ref: bool = False,
+    delta: Optional[Tuple[jax.Array, ...]] = None,
 ) -> Tuple[jax.Array, ...]:
     """Forest-batched ORDERED search (DESIGN.md §6): one pass per query
     yields ``(values, found, pred_keys, pred_values, succ_keys,
@@ -108,7 +120,9 @@ def bst_ordered_forest(
     The single descent behind every ordered query op (predecessor,
     successor, range_count, range_scan) for every strategy -- same
     forest-batching contract as ``bst_search_forest``, same one
-    ``pallas_call`` lowering.
+    ``pallas_call`` lowering.  ``delta`` rides the write buffer (DESIGN.md
+    §7): value/found/rank come back merged against the pending
+    upserts/tombstones; pred/succ stay tree-local (``core/delta.py``).
     """
     if use_ref:
         T = queries.shape[0]
@@ -119,9 +133,17 @@ def bst_ordered_forest(
             fv = jnp.broadcast_to(fv, (T,) + fv.shape[1:])
         if active is None:
             active = jnp.ones(queries.shape, bool)
-        return jax.vmap(
+        out = jax.vmap(
             lambda k, v, q, a: ref.bst_ordered_ref(k, v, q, height, a)
         )(fk, fv, queries, active)
+        if delta is not None:
+            hit, dead, d_val, wb = ref.bst_delta_resolve_ref(
+                *delta, queries, active
+            )
+            val = jnp.where(hit, jnp.where(dead, ref.SENTINEL_VALUE, d_val), out[0])
+            found = jnp.where(hit, ~dead, out[1])
+            out = (val, found) + out[2:6] + (out[6] + wb,)
+        return out
     return bst_ordered_forest_pallas(
         forest_keys,
         forest_values,
@@ -132,6 +154,7 @@ def bst_ordered_forest(
         block_q=block_q,
         interpret=interpret,
         shared_tree=shared_tree,
+        delta=delta,
     )
 
 

@@ -105,6 +105,37 @@ def bst_search_ref(
     return val, found & active
 
 
+def bst_delta_resolve_ref(
+    delta_keys: jax.Array,
+    delta_values: jax.Array,
+    delta_tombstone: jax.Array,
+    delta_weight: jax.Array,
+    queries: jax.Array,
+    active: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Delta-buffer search oracle (DESIGN.md §7): one broadcast compare.
+
+    Operands are the four flat int32 arrays the forest kernel rides
+    (sorted keys with SENTINEL padding, values, tombstone flags, signed
+    rank weights).  Returns per-query ``(hit, dead, value, weight_below)``
+    where ``weight_below`` is the signed weight sum of entries strictly
+    below the query -- the merged-rank correction.  Ground truth for the
+    in-``pallas_call`` resolution; also the driver-level implementation
+    wherever the buffer composes above the kernel (hybrid, distributed).
+    Queries may have any batch shape.
+    """
+    q = queries[..., None]
+    eq = q == delta_keys
+    hit = jnp.any(eq, axis=-1)
+    value = jnp.sum(jnp.where(eq, delta_values, 0), axis=-1)
+    dead = jnp.sum(jnp.where(eq, delta_tombstone, 0), axis=-1) != 0
+    wbelow = jnp.sum(jnp.where(delta_keys < q, delta_weight, 0), axis=-1)
+    if active is not None:
+        hit = hit & active
+        wbelow = jnp.where(active, wbelow, 0)
+    return hit, dead, value.astype(jnp.int32), wbelow.astype(jnp.int32)
+
+
 def queue_dispatch_ref(
     dest: jax.Array, n_dest: int, capacity: int
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:

@@ -16,10 +16,22 @@ atomically between chunks.  This module is that loop, TPU-native:
     padded lanes never leak into answers or accounting;
   * **pluggable engine config** -- any ``EngineConfig`` (strategy, mapping,
     kernel/reference path) serves the same request API;
-  * **snapshot swap** -- ``apply_updates`` runs ``core.updates`` bulk
-    insert/delete on the current snapshot and installs a new engine; lookups
-    submitted before the swap but not yet drained see the new snapshot
-    (drain-before-swap if read-your-epoch consistency is required);
+  * **live write path** (DESIGN.md §7) -- with
+    ``EngineConfig(delta_capacity > 0)`` the server also takes ``write`` /
+    ``delete`` request kinds (``submit_write`` / ``submit_delete``).  The
+    drain preserves SUBMISSION ORDER across read/write boundaries: requests
+    split into maximal read spans (order-independent, packed per op exactly
+    as before) separated by write spans, each write span lands in the
+    engine's device-side delta buffer as fixed-shape padded chunks, and
+    compaction -- the engine's bulk merge into a fresh snapshot -- triggers
+    between chunks at the high-water mark instead of a full O(n + m)
+    rebuild per update.  Per-op stats cover writes too, plus cumulative
+    ``updates`` and ``compactions`` counters;
+  * **snapshot swap** -- ``apply_updates`` on a write-path engine routes
+    through the delta buffer (above); otherwise it runs ``core.updates``
+    bulk insert/delete and installs a new engine.  Lookups submitted before
+    the swap but not yet drained see the new state (drain-before-swap if
+    read-your-epoch consistency is required);
   * **keys/sec accounting** -- per-chunk timing with ``block_until_ready``,
     found counts accumulated per chunk (not just the final one).
 """
@@ -43,6 +55,8 @@ from repro.core.tree import TreeData
 # server's request typing.
 RANGE_OPS = plans_lib.RANGE_OPS
 POINT_OPS = tuple(op for op in plans_lib.QUERY_OPS if op not in RANGE_OPS)
+# Mutating request kinds (DESIGN.md §7); these are drain-order barriers.
+WRITE_OPS = ("write", "delete")
 
 
 @dataclasses.dataclass
@@ -64,11 +78,13 @@ class ServerStats:
 
     requests: int = 0  # submit() calls
     submitted: int = 0  # keys/ranges accepted
-    served: int = 0  # keys/ranges answered
+    served: int = 0  # keys/ranges/write-ops answered
     found: int = 0  # lookup hits, accumulated per chunk
     chunks: int = 0  # engine invocations
     busy_s: float = 0.0  # time inside the engine (incl. padding lanes)
-    snapshot_swaps: int = 0
+    snapshot_swaps: int = 0  # full-rebuild swaps (the non-delta path)
+    updates: int = 0  # write/delete ops absorbed by the delta buffer
+    compactions: int = 0  # delta-buffer merges into fresh snapshots
     per_op: Dict[str, OpStats] = dataclasses.field(default_factory=dict)
 
     @property
@@ -83,8 +99,8 @@ class ServerStats:
 class _Request:
     ticket: int
     op: str
-    a: np.ndarray  # keys (point ops) / range lows
-    b: Optional[np.ndarray]  # range highs (range ops only)
+    a: np.ndarray  # keys (point / write / delete ops) / range lows
+    b: Optional[np.ndarray]  # range highs (range ops) / write values
 
 
 class BSTServer:
@@ -117,11 +133,17 @@ class BSTServer:
         self._pending_keys = 0
         self._next_ticket = 0
         self._warm_ops: Tuple[str, ...] = ()
+        # Fixed jit shape for delta-buffer write chunks (DESIGN.md §7): one
+        # compiled ingest program regardless of request sizes.
+        self._write_chunk = (
+            min(chunk_size, config.delta_capacity)
+            if config.delta_capacity > 0
+            else chunk_size
+        )
         self._install(tree_lib.build_tree(np.asarray(keys), np.asarray(values)))
 
     # --------------------------------------------------------------- snapshot
     def _install(self, tree: TreeData) -> None:
-        self._tree = tree
         self._engine = BSTEngine.from_tree(tree, self.config)
         if self._warm_ops:
             # The fresh engine's jit closes over the new snapshot; re-warm so
@@ -130,8 +152,9 @@ class BSTServer:
 
     @property
     def snapshot(self) -> TreeData:
-        """The current immutable tree snapshot."""
-        return self._tree
+        """The current immutable tree snapshot (pending delta-buffer writes,
+        if any, overlay it until the next compaction)."""
+        return self._engine.tree
 
     @property
     def engine(self) -> BSTEngine:
@@ -158,13 +181,28 @@ class BSTServer:
         insert_values=None,
         delete_keys=None,
     ) -> TreeData:
-        """Bulk-maintain the store and swap in the fresh snapshot.
+        """Bulk-maintain the store (deletes before inserts, so an upsert of
+        a just-deleted key lands).  Returns the current snapshot.  Pending
+        (undrained) requests will be served from the new state.
 
-        Deletes are applied before inserts, so an upsert of a just-deleted
-        key lands.  Returns the new snapshot.  Pending (undrained) requests
-        will be served from the new snapshot.
+        With the write path enabled (``delta_capacity > 0``) the batch is
+        absorbed by the engine's device-side delta buffer -- no rebuild,
+        compaction at the high-water mark (DESIGN.md §7).  Otherwise this
+        is the legacy full rebuild + snapshot swap.
         """
-        tree = self._tree
+        n_ops = sum(
+            len(np.atleast_1d(x)) for x in (insert_keys, delete_keys)
+            if x is not None
+        )
+        if self._engine.delta is not None:
+            before = self._engine.compactions
+            self._engine.apply_updates(insert_keys, insert_values, delete_keys)
+            self.stats.updates += n_ops
+            self.stats.compactions += self._engine.compactions - before
+            if self._engine.compactions != before and self._warm_ops:
+                self.warmup(self._warm_ops)  # compaction reset the jit cache
+            return self._engine.tree
+        tree = self._engine.tree
         if delete_keys is not None and len(np.atleast_1d(delete_keys)):
             tree = updates_lib.bulk_delete(tree, delete_keys)
         if insert_keys is not None and len(np.atleast_1d(insert_keys)):
@@ -203,6 +241,40 @@ class BSTServer:
             raise ValueError("lo/hi must be equal-length scalars or 1-D arrays")
         return self._enqueue(_Request(0, op, lo, hi), lo.size)
 
+    def submit_write(self, request_keys, request_values) -> int:
+        """Queue an upsert request (DESIGN.md §7); returns a ticket.
+
+        Requires a write-path engine (``delta_capacity > 0``).  The drain
+        applies writes in SUBMISSION ORDER relative to every other request
+        (reads before the write see the old state, reads after see it);
+        the ticket resolves to ``(applied_count,)``.
+        """
+        self._require_write_path()
+        k = np.atleast_1d(np.asarray(request_keys, np.int32))
+        v = np.atleast_1d(np.asarray(request_values, np.int32))
+        if k.shape != v.shape or k.ndim != 1:
+            raise ValueError("keys/values must be equal-length scalars or 1-D")
+        return self._enqueue(_Request(0, "write", k, v), k.size)
+
+    def submit_delete(self, request_keys) -> int:
+        """Queue a delete (tombstone) request; returns a ticket.
+
+        Same ordering contract as ``submit_write``; deleting an absent key
+        is a no-op that still counts as applied.
+        """
+        self._require_write_path()
+        k = np.atleast_1d(np.asarray(request_keys, np.int32))
+        if k.ndim != 1:
+            raise ValueError("request_keys must be scalar or 1-D")
+        return self._enqueue(_Request(0, "delete", k, None), k.size)
+
+    def _require_write_path(self) -> None:
+        if self._engine.delta is None:
+            raise ValueError(
+                "write/delete request kinds need EngineConfig(delta_capacity"
+                " > 0); use apply_updates() for bulk snapshot swaps"
+            )
+
     def _enqueue(self, req: _Request, size: int) -> int:
         req.ticket = self._next_ticket
         self._next_ticket += 1
@@ -223,9 +295,17 @@ class BSTServer:
         Result shapes per op: ``lookup`` -> (values, found);
         ``predecessor``/``successor`` -> (keys, values, ok);
         ``range_count`` -> (counts,); ``range_scan`` -> (keys, values,
-        counts).  Each op's stream is packed into its own ``chunk_size``
-        engine calls; only the final partial chunk per op is padded, and
-        padded lanes are dropped before results or accounting.
+        counts); ``write``/``delete`` -> (applied_count,).
+
+        Write requests are ORDER BARRIERS: the queue splits into maximal
+        read spans separated by write spans, served in submission order, so
+        a read observes exactly the writes submitted before it.  Within a
+        read span (reads commute) each op's stream is packed into its own
+        ``chunk_size`` engine calls exactly as before; write spans land in
+        the delta buffer as fixed-shape padded chunks (DESIGN.md §7), with
+        compaction between chunks when the high-water mark trips.  Only
+        final partial chunks are padded, and padded lanes never reach
+        results or accounting.
         """
         if not self._pending:
             return {}
@@ -233,21 +313,94 @@ class BSTServer:
         self._pending = []
         self._pending_keys = 0
 
-        by_op: Dict[str, List[_Request]] = {}
-        for req in batch:
-            by_op.setdefault(req.op, []).append(req)
-
         out: Dict[int, tuple] = {}
-        for op, reqs in by_op.items():
-            a = np.concatenate([r.a for r in reqs])
-            b = np.concatenate([r.b for r in reqs]) if op in RANGE_OPS else None
+        span: List[_Request] = []
+        for req in batch:
+            if req.op in WRITE_OPS:
+                if span and span[-1].op not in WRITE_OPS:
+                    self._serve_read_span(span, out)
+                    span = []
+            elif span and span[-1].op in WRITE_OPS:
+                self._serve_write_span(span, out)
+                span = []
+            span.append(req)
+        if span:
+            if span[-1].op in WRITE_OPS:
+                self._serve_write_span(span, out)
+            else:
+                self._serve_read_span(span, out)
+        return out
+
+    def _serve_read_span(self, reqs: List[_Request], out: Dict[int, tuple]):
+        """One writeless span: requests commute, so pack per op kind."""
+        by_op: Dict[str, List[_Request]] = {}
+        for req in reqs:
+            by_op.setdefault(req.op, []).append(req)
+        for op, group in by_op.items():
+            a = np.concatenate([r.a for r in group])
+            b = np.concatenate([r.b for r in group]) if op in RANGE_OPS else None
             columns = self._serve_stream(op, a, b)
             lo = 0
-            for r in reqs:
+            for r in group:
                 hi = lo + r.a.size
                 out[r.ticket] = tuple(col[lo:hi] for col in columns)
                 lo = hi
-        return out
+
+    def _serve_write_span(self, reqs: List[_Request], out: Dict[int, tuple]):
+        """One run of consecutive write/delete requests -> delta ingest.
+
+        Consecutive mutations merge into a single submission-ordered batch
+        (the buffer's last-wins dedup preserves exactly that order), padded
+        to the fixed ``write_chunk`` jit shape.  Engine-side compaction may
+        swap the snapshot between chunks; the server then re-warms the jit
+        cache so later read chunks stay compile-free.
+        """
+        keys = np.concatenate([r.a for r in reqs])
+        values = np.concatenate(
+            [r.b if r.op == "write" else np.zeros(r.a.size, np.int32) for r in reqs]
+        )
+        deletes = np.concatenate(
+            [np.full(r.a.size, r.op == "delete") for r in reqs]
+        )
+        pad = (-keys.size) % self._write_chunk
+        valid = np.ones(keys.size + pad, bool)
+        if pad:
+            valid[keys.size:] = False
+            keys = np.pad(keys, (0, pad))
+            values = np.pad(values, (0, pad))
+            deletes = np.pad(deletes, (0, pad))
+        before = self._engine.compactions
+        t0 = time.perf_counter()
+        # One engine call per _write_chunk slice: every ingest reuses the
+        # single compiled program regardless of span size (the engine only
+        # re-slices by its own capacity, which may be larger).
+        n_calls = 0
+        for lo in range(0, keys.size, self._write_chunk):
+            sl = slice(lo, lo + self._write_chunk)
+            self._engine.apply_ops(keys[sl], values[sl], deletes[sl], valid[sl])
+            n_calls += 1
+        # dispatch is async: sync on the buffer so busy_s measures the
+        # ingest compute, exactly as _serve_stream syncs on query results
+        jax.block_until_ready(self._engine.delta)
+        dt = time.perf_counter() - t0
+        n = int(valid.sum())
+        self.stats.busy_s += dt
+        self.stats.updates += n
+        self.stats.served += n
+        self.stats.chunks += n_calls
+        swept = self._engine.compactions - before
+        self.stats.compactions += swept
+        if swept and self._warm_ops:
+            self.warmup(self._warm_ops)
+        for r in reqs:
+            op_stats = self.stats.op(r.op)
+            op_stats.served += r.a.size
+            op_stats.busy_s += dt * (r.a.size / max(n, 1))
+            out[r.ticket] = (np.asarray(r.a.size, np.int32),)
+        for kind in {r.op for r in reqs}:
+            # a mixed span's engine calls served both kinds; each kind
+            # records every call it rode in (same rule as busy_s sharing)
+            self.stats.op(kind).chunks += n_calls
 
     def _empty_columns(self, op: str):
         """Result columns for a zero-key stream (no engine call needed)."""
@@ -327,6 +480,16 @@ class BSTServer:
     def range_scan(self, lo, hi):
         ticket = self.submit_range(lo, hi, op="range_scan")
         return self.drain()[ticket]
+
+    def write(self, request_keys, request_values) -> int:
+        """Synchronous upsert: submit one write request and drain."""
+        ticket = self.submit_write(request_keys, request_values)
+        return int(self.drain()[ticket][0])
+
+    def delete(self, request_keys) -> int:
+        """Synchronous delete: submit one tombstone request and drain."""
+        ticket = self.submit_delete(request_keys)
+        return int(self.drain()[ticket][0])
 
     # ------------------------------------------------------------- accounting
     def reset_stats(self) -> None:

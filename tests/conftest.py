@@ -10,6 +10,8 @@ import pytest
 
 try:  # real hypothesis when available; deterministic fallback otherwise
     import hypothesis  # noqa: F401
+
+    _USING_SHIM = False
 except ModuleNotFoundError:
     _spec = importlib.util.spec_from_file_location(
         "_hypothesis_fallback",
@@ -18,6 +20,22 @@ except ModuleNotFoundError:
     _mod = importlib.util.module_from_spec(_spec)
     _spec.loader.exec_module(_mod)
     _mod.install()
+    _USING_SHIM = True
+
+
+def pytest_addoption(parser):
+    # CI pins the differential harness with --hypothesis-seed; real
+    # hypothesis registers that flag itself, so only the shim (which is
+    # deterministic regardless -- the value is accepted and ignored) needs
+    # to add it to keep the same command line working everywhere.
+    if _USING_SHIM:
+        parser.addoption(
+            "--hypothesis-seed",
+            action="store",
+            default=None,
+            help="accepted for CI parity; the deterministic fallback shim "
+            "derives per-test seeds from test names instead",
+        )
 
 from repro.core import tree as tree_lib
 from repro.data.keysets import make_tree_data

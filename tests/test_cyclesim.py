@@ -77,6 +77,21 @@ def test_queue_beats_direct_on_random(matrix):
         assert q.stall_cycles < d.stall_cycles
 
 
+def test_fig7_relative_ordering_golden(matrix):
+    """Golden pin of the paper's Fig. 7 relative-throughput ordering on the
+    random key set: Hrz < Hyb4 < Dup4 < Hyb8q <= Dup8.  Kernel/engine work
+    must not silently diverge the cycle model from the paper's story (the
+    hybrids trade stalls for memory; duplication buys stall-free ports)."""
+    row = matrix["random"]
+    sp = {impl: speedup(row, impl) for impl in row}
+    assert sp["Hrz"] == pytest.approx(1.0)
+    assert sp["Hrz"] < sp["Hyb4"] < sp["Dup4"] < sp["Hyb8q"] <= sp["Dup8"], sp
+    # and the queue mapping sits between its direct twin and the replica
+    # ceiling for both widths, as in the figure
+    assert sp["Hyb4"] < sp["Hyb4q"] < sp["Dup4"], sp
+    assert sp["Hyb8"] < sp["Hyb8q"] <= sp["Dup8"], sp
+
+
 def test_pipeline_latency_accounting():
     keys, values = make_tree_data(255, seed=1)
     tree = T.build_tree(keys, values)

@@ -1,0 +1,201 @@
+"""Delta write buffer unit tests (DESIGN.md §7): ingest semantics, empty-
+buffer identity, compaction triggers, and the device-residency guarantee."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import delta as D
+from repro.core import tree as T
+from repro.core.engine import BSTEngine, EngineConfig
+from repro.data.keysets import make_tree_data
+
+
+def _tree_and_kv(n=200, seed=0):
+    keys, values = make_tree_data(n, seed=seed)
+    return T.build_tree(keys, values), dict(zip(keys.tolist(), values.tolist()))
+
+
+def _ingest(tree, delta, ks, vs, ds):
+    ks = jnp.asarray(np.asarray(ks, np.int32))
+    res = T.search_reference_ordered(tree, ks)
+    return D.ingest(
+        delta,
+        ks,
+        jnp.asarray(np.asarray(vs, np.int32)),
+        jnp.asarray(np.asarray(ds, bool)),
+        jnp.ones(ks.shape, bool),
+        res.found,
+        res.rank,
+    )
+
+
+def test_ingest_sorted_dedup_last_wins():
+    tree, _ = _tree_and_kv()
+    d = D.empty(8)
+    # same key three times in one batch (upsert, delete, upsert): last wins
+    d = _ingest(tree, d, [9, 9, 9, 5], [1, 0, 3, 50], [False, True, False, False])
+    k = np.asarray(d.keys)
+    assert int(d.count) == 2
+    assert k[0] == 5 and k[1] == 9 and np.all(k[2:] == T.SENTINEL_KEY)
+    assert np.asarray(d.values)[1] == 3 and not bool(np.asarray(d.tombstone)[1])
+    # a later batch overrides the buffered entry (old-then-new stable order)
+    d = _ingest(tree, d, [9], [0], [True])
+    assert int(d.count) == 2 and bool(np.asarray(d.tombstone)[1])
+    # weights: 5 and 9 are absent from the tree -> upsert-new +1, dead 0
+    np.testing.assert_array_equal(np.asarray(D.weights(d))[:2], [1, 0])
+
+
+def test_empty_buffer_is_bitwise_identity():
+    """An attached-but-empty buffer must not change ANY answer -- the same
+    compiled function serves the engine before its first write."""
+    keys, values = make_tree_data(300, seed=4)
+    rng = np.random.default_rng(0)
+    q = rng.choice(np.concatenate([keys, keys + 1]), 64).astype(np.int32)
+    lo = np.sort(q)
+    hi = (lo + rng.integers(0, 30, lo.size)).astype(np.int32)
+    for strategy, n in (("hrz", 1), ("dup", 4), ("hyb", 4)):
+        plain = BSTEngine(keys, values, EngineConfig(strategy=strategy, n_trees=n))
+        live = BSTEngine(
+            keys, values,
+            EngineConfig(strategy=strategy, n_trees=n, delta_capacity=16),
+        )
+        for op, a, b in (
+            ("lookup", q, None),
+            ("predecessor", q, None),
+            ("successor", q, None),
+            ("range_count", lo, hi),
+            ("range_scan", lo, hi),
+        ):
+            r1 = plain.query(op, a, b) if b is not None else plain.query(op, a)
+            r2 = live.query(op, a, b) if b is not None else live.query(op, a)
+            r1 = r1 if isinstance(r1, tuple) else (r1,)
+            r2 = r2 if isinstance(r2, tuple) else (r2,)
+            for c1, c2 in zip(r1, r2):
+                np.testing.assert_array_equal(
+                    np.asarray(c1), np.asarray(c2), err_msg=f"{strategy}/{op}"
+                )
+
+
+def test_updates_never_leave_device():
+    """The DESIGN.md §7 acceptance gate: the whole update path -- query
+    with live buffer, batch ingest, compaction merge -- must trace under
+    jax abstract evaluation.  Any host round-trip (np.asarray on a traced
+    value, python branching on device data) raises a TracerError here."""
+    keys, values = make_tree_data(200, seed=1)
+    eng = BSTEngine(keys, values, EngineConfig(strategy="hrz", delta_capacity=16))
+    q = jax.ShapeDtypeStruct((32,), jnp.int32)
+    d = jax.eval_shape(lambda: eng.delta)  # DeltaBuffer of abstract leaves
+
+    # 1) queries with the buffer attached (every op) trace end to end
+    from repro.core import plans as plans_lib
+
+    for op in ("lookup", "predecessor", "successor"):
+        jax.eval_shape(
+            lambda qq, dd, op=op: plans_lib.ordered_query(eng.plan, op, qq, delta=dd),
+            q, d,
+        )
+    jax.eval_shape(
+        lambda lo, hi, dd: plans_lib.ordered_query(
+            eng.plan, "range_scan", lo, hi, k=4, delta=dd
+        ),
+        q, q, d,
+    )
+
+    # 2) the jitted ingest program traces (descend + classify + merge)
+    m = 8
+    jax.eval_shape(
+        eng._ingest,
+        d,
+        jax.ShapeDtypeStruct((m,), jnp.int32),
+        jax.ShapeDtypeStruct((m,), jnp.int32),
+        jax.ShapeDtypeStruct((m,), jnp.bool_),
+        jax.ShapeDtypeStruct((m,), jnp.bool_),
+    )
+
+    # 3) the compaction merge traces (the single host sync -- the count
+    # scalar -- happens OUTSIDE compact_sorted, after it returns)
+    rank_to_bfs = jnp.asarray(T.rank_to_bfs_indices(eng.tree.height))
+    out_k, out_v, count = jax.eval_shape(
+        lambda tk, tv, dd: D.compact_sorted(
+            tk, tv, rank_to_bfs, eng.tree.n_real, dd,
+            eng.tree.n_real + eng.config.delta_capacity,
+        ),
+        eng.tree.keys, eng.tree.values, d,
+    )
+    assert count.shape == ()
+
+
+def test_high_water_triggers_compaction():
+    keys, values = make_tree_data(100, seed=2)
+    cfg = EngineConfig(strategy="hrz", delta_capacity=8, delta_high_water=6)
+    eng = BSTEngine(keys, values, cfg)
+    eng.apply_updates(insert_keys=[1, 3, 5], insert_values=[1, 3, 5])
+    assert eng.compactions == 0 and eng.pending_writes() == 3
+    eng.apply_updates(insert_keys=[7, 9, 11], insert_values=[7, 9, 11])
+    assert eng.compactions == 1 and eng.pending_writes() == 0
+    v, f = eng.lookup(np.array([1, 3, 5, 7, 9, 11], np.int32))
+    assert np.all(np.asarray(f)) and np.array_equal(
+        np.asarray(v), [1, 3, 5, 7, 9, 11]
+    )
+    # a batch larger than the capacity splits and compacts as it goes
+    big = np.arange(13, 63, 2, dtype=np.int32)
+    eng.apply_updates(insert_keys=big, insert_values=big * 2)
+    v, f = eng.lookup(big)
+    assert np.all(np.asarray(f))
+    np.testing.assert_array_equal(np.asarray(v), big * 2)
+
+
+def test_read_only_engine_rejects_apply_ops():
+    keys, values = make_tree_data(50, seed=3)
+    eng = BSTEngine(keys, values, EngineConfig(strategy="hrz"))
+    with pytest.raises(ValueError, match="write path disabled"):
+        eng.apply_ops([1], [1], [False])
+    # but apply_updates falls back to bulk rebuild + fresh plan
+    eng.apply_updates(insert_keys=[1], insert_values=[10])
+    v, f = eng.lookup(np.array([1], np.int32))
+    assert bool(f[0]) and int(v[0]) == 10
+
+
+def test_compaction_preserves_oracle_state():
+    tree, kv = _tree_and_kv(150, seed=5)
+    d = D.empty(16)
+    ks = [1, 3, int(np.asarray(tree.keys)[0]), 5, 3]
+    vs = [10, 30, 999, 50, 31]
+    ds = [False, False, False, False, True]  # 3 inserted then tombstoned
+    d = _ingest(tree, d, ks, vs, ds)
+    kv[1] = 10
+    kv[int(np.asarray(tree.keys)[0])] = 999
+    kv[5] = 50
+    tree2 = D.compact(tree, d)
+    sk = np.asarray(tree2.keys)[T.rank_to_bfs_indices(tree2.height)][: tree2.n_real]
+    sv = np.asarray(tree2.values)[T.rank_to_bfs_indices(tree2.height)][: tree2.n_real]
+    assert sk.tolist() == sorted(kv)
+    assert sv.tolist() == [kv[k] for k in sorted(kv)]
+
+
+def test_kernel_delta_matches_ref_property(medium_tree):
+    """The in-pallas_call buffer resolution == the jnp twin, bit for bit."""
+    tree, keys, _ = medium_tree
+    rng = np.random.default_rng(9)
+    d = D.empty(32)
+    nk = rng.choice(np.concatenate([keys[:64], keys[:64] + 1]), 24, replace=False)
+    nv = rng.integers(0, 10**6, 24).astype(np.int32)
+    nd = rng.integers(0, 2, 24).astype(bool)
+    d = _ingest(tree, d, nk.astype(np.int32), nv, nd)
+    q = rng.choice(np.concatenate([keys, keys + 1]), 700).astype(np.int32)
+    from repro.kernels import ops as kops
+
+    args = (tree.keys[None, :], tree.values[None, :], jnp.asarray(q)[None, :])
+    kw = dict(height=tree.height, delta=D.operands(d))
+    ref_out = kops.bst_ordered_forest(*args, use_ref=True, **kw)
+    ker_out = kops.bst_ordered_forest(*args, use_ref=False, **kw)
+    for a, b in zip(ref_out, ker_out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    ref2 = kops.bst_search_forest(*args, use_ref=True, **kw)
+    ker2 = kops.bst_search_forest(*args, use_ref=False, **kw)
+    for a, b in zip(ref2, ker2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

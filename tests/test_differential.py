@@ -1,0 +1,313 @@
+"""Property-based differential harness for the live write path (DESIGN.md §7).
+
+Random op sequences -- insert / delete / re-insert / lookup / predecessor /
+successor / range_count / range_scan -- run through the delta-buffered
+engine and are checked BIT-FOR-BIT against a plain Python ``dict`` +
+``sorted`` oracle, preserving submission order (a read sees exactly the
+writes before it).  Coverage axes:
+
+  * hrz / dup / hyb strategies, reference AND Pallas-kernel descent paths;
+  * pre-compaction (live buffer) and post-compaction (fresh snapshot)
+    states -- every sequence is re-probed right after a forced ``compact()``;
+  * the ≥ 500-op mixed-stream acceptance gate through ``BSTServer``'s typed
+    write/delete request kinds, per strategy.
+
+Runs under real hypothesis or the deterministic ``_hypothesis_fallback``
+shim alike (the strategies stick to the shim's subset).  Reads are flushed
+in write-bounded spans at fixed padded shapes so each engine epoch compiles
+once; correctness never depends on the batching.
+"""
+
+import zlib
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import BSTEngine, EngineConfig
+from repro.data.keysets import make_tree_data
+from repro.serving import BSTServer
+
+KEYSPACE = 500  # small universe -> plenty of overwrites / re-inserts
+SCAN_K = 4
+PROBE_PAD = 32  # fixed read-span batch shape (one compile per op kind)
+WRITE_PAD = 16  # fixed write-span batch shape
+
+READ_OPS = ("lookup", "predecessor", "successor", "range_count", "range_scan")
+ALL_OPS = ("insert", "delete") + READ_OPS
+
+SENT_K = np.iinfo(np.int32).max
+NO_PRED = np.iinfo(np.int32).min
+
+
+def op_stream(min_size, max_size):
+    return st.lists(
+        st.tuples(
+            st.sampled_from(ALL_OPS),
+            st.integers(1, KEYSPACE),
+            st.integers(0, 10**6),
+            st.integers(0, 40),  # range span
+        ),
+        min_size=min_size,
+        max_size=max_size,
+    )
+
+
+# ------------------------------------------------------------------ oracle
+def oracle_answer(kv, op, q, span):
+    """The Python dict + sorted ground truth for one read op."""
+    sk = sorted(kv)
+    if op == "lookup":
+        return (kv.get(q, -1) if q in kv else -1, q in kv)
+    if op == "predecessor":
+        cands = [x for x in sk if x <= q]
+        if not cands:
+            return (NO_PRED, -1, False)
+        return (cands[-1], kv[cands[-1]], True)
+    if op == "successor":
+        cands = [x for x in sk if x >= q]
+        if not cands:
+            return (SENT_K, -1, False)
+        return (cands[0], kv[cands[0]], True)
+    in_range = [x for x in sk if q <= x <= q + span]
+    if op == "range_count":
+        return (len(in_range),)
+    head = in_range[:SCAN_K]
+    keys = head + [SENT_K] * (SCAN_K - len(head))
+    vals = [kv[x] for x in head] + [-1] * (SCAN_K - len(head))
+    return (keys, vals, min(len(in_range), SCAN_K))
+
+
+def check_read(name, kv, op, q, span, got):
+    exp = oracle_answer(kv, op, q, span)
+    ctx = f"{name}: {op}({q}, span={span})"
+    if op == "lookup":
+        val, found = got
+        assert bool(found) == exp[1], ctx
+        if exp[1]:
+            assert int(val) == exp[0], ctx
+    elif op in ("predecessor", "successor"):
+        key, val, ok = got
+        assert bool(ok) == exp[2], ctx
+        assert int(key) == exp[0], f"{ctx}: key {int(key)} != {exp[0]}"
+        if exp[2]:
+            assert int(val) == exp[1], ctx
+    elif op == "range_count":
+        assert int(got) == exp[0], f"{ctx}: count {int(got)} != {exp[0]}"
+    else:
+        keys, vals, taken = got
+        assert int(taken) == exp[2], ctx
+        assert np.asarray(keys).tolist() == exp[0], ctx
+        assert np.asarray(vals).tolist() == exp[1], ctx
+
+
+# ----------------------------------------------------------------- driving
+def flush_reads(name, eng, kv, reads):
+    """Evaluate a read span at fixed padded shapes, checking each lane."""
+    by_op = {}
+    for op, q, span in reads:
+        by_op.setdefault(op, []).append((q, span))
+    for op, items in by_op.items():
+        qs = np.array([q for q, _ in items], np.int32)
+        spans = np.array([s for _, s in items], np.int32)
+        pad = PROBE_PAD - qs.size
+        qp = np.pad(qs, (0, pad), mode="edge")
+        sp = np.pad(spans, (0, pad), mode="edge")
+        if op in ("range_count", "range_scan"):
+            res = eng.query(op, qp, qp + sp, k=SCAN_K)
+        else:
+            res = eng.query(op, qp)
+        cols = res if isinstance(res, tuple) else (res,)
+        for i, (q, span) in enumerate(items):
+            lane = tuple(np.asarray(c)[i] for c in cols)
+            check_read(name, kv, op, q, span, lane if len(lane) > 1 else lane[0])
+
+
+def flush_writes(eng, pending):
+    """Apply a write span through the device ingest at a fixed jit shape."""
+    keys = np.array([k for k, _, _ in pending], np.int32)
+    vals = np.array([v for _, v, _ in pending], np.int32)
+    dels = np.array([d for _, _, d in pending], bool)
+    pad = (-keys.size) % WRITE_PAD
+    valid = np.ones(keys.size + pad, bool)
+    if pad:
+        valid[keys.size:] = False
+        keys, vals, dels = (np.pad(a, (0, pad)) for a in (keys, vals, dels))
+    eng.apply_ops(keys, vals, dels, valid)
+
+
+def run_stream(name, eng, kv, ops):
+    """One submission-ordered pass: write spans flush before the next read."""
+    reads, writes = [], []
+    for op, key, value, span in ops:
+        if op in ("insert", "delete"):
+            if reads:
+                flush_reads(name, eng, kv, reads)
+                reads = []
+            writes.append((key, value, op == "delete"))
+            if op == "delete":
+                kv.pop(key, None)
+            else:
+                kv[key] = value
+            if len(writes) == WRITE_PAD:
+                flush_writes(eng, writes)
+                writes = []
+        else:
+            if writes:
+                flush_writes(eng, writes)
+                writes = []
+            reads.append((op, key, span))
+            if len(reads) == PROBE_PAD:
+                flush_reads(name, eng, kv, reads)
+                reads = []
+    if writes:
+        flush_writes(eng, writes)
+    if reads:
+        flush_reads(name, eng, kv, reads)
+
+
+def probe_all_ops(name, eng, kv, rng):
+    """One fixed probe batch over every op kind (pre/post-compaction pin)."""
+    qs = rng.integers(1, KEYSPACE + 60, PROBE_PAD).astype(np.int32)
+    reads = [(op, int(q), int(q) % 37) for op in READ_OPS for q in qs[:6]]
+    flush_reads(name, eng, kv, reads)
+
+
+# The engines persist across hypothesis examples: each example extends the
+# same live stream (state evolves through buffer fills and compactions),
+# and compile costs amortize.  The oracle dict travels with its engine.
+_ENGINES = {}
+
+
+def _get_engine(name, cfg):
+    if name not in _ENGINES:
+        keys, values = make_tree_data(120, seed=zlib.crc32(name.encode()) % 97, spacing=3)
+        eng = BSTEngine(keys, values, cfg)
+        _ENGINES[name] = (eng, dict(zip(keys.tolist(), values.tolist())))
+    return _ENGINES[name]
+
+
+REF_CONFIGS = {
+    "hrz": EngineConfig(strategy="hrz", delta_capacity=48, delta_high_water=40),
+    "dup4": EngineConfig(
+        strategy="dup", n_trees=4, delta_capacity=48, delta_high_water=40
+    ),
+    "hyb4q": EngineConfig(
+        strategy="hyb", n_trees=4, mapping="queue",
+        delta_capacity=48, delta_high_water=40,
+    ),
+}
+
+
+@given(op_stream(30, 60), st.integers(0, 2**31 - 1))
+@settings(max_examples=6, deadline=None)
+def test_engine_differential_ref(ops, seed):
+    """Random op streams == dict oracle, all strategies, reference path."""
+    rng = np.random.default_rng(seed % 2**32)
+    for name, cfg in REF_CONFIGS.items():
+        eng, kv = _get_engine(name, cfg)
+        run_stream(name, eng, kv, ops)
+        probe_all_ops(name, eng, kv, rng)
+
+
+def test_engine_differential_ref_post_compaction():
+    """The same engines, probed immediately after a forced compaction."""
+    rng = np.random.default_rng(7)
+    for name, cfg in REF_CONFIGS.items():
+        eng, kv = _get_engine(name, cfg)
+        run_stream(name, eng, kv, [("insert", 17, 1700, 0), ("delete", 18, 0, 0)])
+        kv[17] = 1700
+        kv.pop(18, None)
+        probe_all_ops(name + "/pre", eng, kv, rng)
+        eng.compact()
+        assert eng.pending_writes() == 0
+        probe_all_ops(name + "/post", eng, kv, rng)
+
+
+@given(op_stream(14, 24), st.integers(0, 2**31 - 1))
+@settings(max_examples=2, deadline=None)
+def test_engine_differential_kernel(ops, seed):
+    """The Pallas forest-kernel path (interpret mode): same differential,
+    shorter streams -- the kernel is exercised per span, pre- and (via the
+    buffer filling up) post-compaction."""
+    rng = np.random.default_rng(seed % 2**32)
+    for name, strategy, n in (("khrz", "hrz", 1), ("kdup4", "dup", 4)):
+        cfg = EngineConfig(
+            strategy=strategy, n_trees=n, use_kernel=True,
+            delta_capacity=32, delta_high_water=28,
+        )
+        eng, kv = _get_engine(name, cfg)
+        run_stream(name, eng, kv, ops)
+        probe_all_ops(name, eng, kv, rng)
+
+
+def test_engine_differential_kernel_hyb_post_compaction():
+    """Hybrid through the kernel path, pre/post explicit compaction."""
+    cfg = EngineConfig(
+        strategy="hyb", n_trees=4, mapping="queue", use_kernel=True,
+        delta_capacity=32, delta_high_water=28,
+    )
+    eng, kv = _get_engine("khyb4q", cfg)
+    rng = np.random.default_rng(11)
+    ops = [
+        ("insert", 7, 70, 0), ("lookup", 7, 0, 0), ("delete", 7, 0, 0),
+        ("lookup", 7, 0, 0), ("insert", 7, 71, 0),  # re-insert
+        ("predecessor", 8, 0, 0), ("range_scan", 1, 0, 39),
+    ]
+    run_stream("khyb4q", eng, kv, ops)
+    probe_all_ops("khyb4q/pre", eng, kv, rng)
+    eng.compact()
+    probe_all_ops("khyb4q/post", eng, kv, rng)
+
+
+# ------------------------------------------------------- server acceptance
+@pytest.mark.parametrize("name", sorted(REF_CONFIGS))
+def test_server_mixed_stream_500_ops(name):
+    """≥ 500 mixed ops (90/10 read/write) through BSTServer's typed write
+    request kinds, drained in chunks, bit-identical to the oracle across
+    every strategy -- the DESIGN.md §7 acceptance gate."""
+    cfg = REF_CONFIGS[name]
+    keys, values = make_tree_data(150, seed=3, spacing=3)
+    srv = BSTServer(keys, values, cfg, chunk_size=64, scan_k=SCAN_K)
+    kv = dict(zip(keys.tolist(), values.tolist()))
+    rng = np.random.default_rng(zlib.crc32(name.encode()) % 2**31)
+
+    n_ops = 520
+    kinds = rng.choice(
+        np.array(ALL_OPS), n_ops, p=[0.06, 0.04, 0.35, 0.15, 0.15, 0.15, 0.10]
+    )
+    tickets = []  # (ticket, op, key, span, kv-at-submit-time)
+    for i, op in enumerate(kinds.tolist()):
+        q = int(rng.integers(1, KEYSPACE))
+        span = int(rng.integers(0, 40))
+        if op == "insert":
+            v = int(rng.integers(0, 10**6))
+            t = srv.submit_write(q, v)
+            kv[q] = v
+            tickets.append((t, op, q, span, None))
+        elif op == "delete":
+            t = srv.submit_delete(q)
+            kv.pop(q, None)
+            tickets.append((t, op, q, span, None))
+        else:
+            if op in ("range_count", "range_scan"):
+                t = srv.submit_range(q, q + span, op=op)
+            else:
+                t = srv.submit(q, op=op)
+            tickets.append((t, op, q, span, dict(kv)))
+        if (i + 1) % 50 == 0 or i == n_ops - 1:
+            results = srv.drain()
+            for t, top, tq, tspan, snap in tickets:
+                got = results[t]
+                if top in ("insert", "delete"):
+                    assert int(got[0]) == 1
+                    continue
+                lane = tuple(np.asarray(c)[0] for c in got)
+                check_read(
+                    f"{name}/server", snap, top, tq, tspan,
+                    lane if len(lane) > 1 else lane[0],
+                )
+            tickets = []
+    assert srv.stats.updates > 0
+    assert srv.stats.compactions > 0, "stream must cross the high-water mark"
+    assert srv.pending() == 0

@@ -110,6 +110,61 @@ def test_distributed_ordered_query_ops():
     assert "ALL OK" in out
 
 
+def test_distributed_delta_write_path():
+    """run(op, ..., delta=...) on both multi-chip engines: the replicated
+    write buffer (DESIGN.md §7) folds into the packed OrderedResult after
+    the collectives -- lookup/predecessor/range ops must all match a
+    dict+sorted oracle, with upserts, overwrites and tombstones live."""
+    out = run_sub("""
+        import bisect
+        from repro.core import build_tree, delta as D, tree as T
+        from repro.core.distributed import make_distributed_query, make_dup_query
+        from repro.data.keysets import make_tree_data
+        mesh = make_mesh((2, 4), ("data", "model"))
+        keys, values = make_tree_data(4000)
+        tr = build_tree(keys, values)
+        kv = dict(zip(keys.tolist(), values.tolist()))
+        # buffer: new key, overwrite, tombstone (and a tombstone-miss no-op)
+        nk = np.array([3, int(keys[7]), int(keys[50]), 9999999], np.int32)
+        nv = np.array([30, 777, 0, 0], np.int32)
+        nd = np.array([False, False, True, True])
+        res = T.search_reference_ordered(tr, jnp.asarray(nk))
+        d = D.ingest(D.empty(16), jnp.asarray(nk), jnp.asarray(nv),
+                     jnp.asarray(nd), jnp.ones(4, bool), res.found, res.rank)
+        kv[3] = 30; kv[int(keys[7])] = 777; kv.pop(int(keys[50]))
+        sk = sorted(kv)
+        rng = np.random.default_rng(1)
+        q = np.concatenate([nk, rng.choice(np.concatenate([keys, keys + 1]), 248)]).astype(np.int32)
+        with mesh:
+            for run in (make_distributed_query(tr, mesh, axis="model"),
+                        make_dup_query(tr, mesh, axis="data")):
+                v, f = run("lookup", q, delta=d)
+                pk, pv, ok = run("predecessor", q, delta=d)
+                cnt = run("range_count", q, q + 60, delta=d)
+                K, V, tk = run("range_scan", q, q + 60, k=4, delta=d)
+                for i, qq in enumerate(q.tolist()):
+                    assert bool(f[i]) == (qq in kv), qq
+                    if qq in kv: assert int(v[i]) == kv[qq], qq
+                    j = bisect.bisect_right(sk, qq) - 1
+                    if j >= 0:
+                        assert bool(ok[i]) and int(pk[i]) == sk[j], qq
+                        assert int(pv[i]) == kv[sk[j]], qq
+                    else:
+                        assert not bool(ok[i])
+                    in_r = [x for x in sk if qq <= x <= qq + 60]
+                    assert int(cnt[i]) == len(in_r), qq
+                    t = int(np.asarray(tk)[i])
+                    assert t == min(len(in_r), 4)
+                    assert np.asarray(K)[i, :t].tolist() == in_r[:t], qq
+                # the same handle without delta still answers from the snapshot
+                v0, f0 = run("lookup", np.full(8, 3, np.int32))
+                assert not bool(f0[0])
+                print("engine ok")
+        print("ALL OK")
+    """)
+    assert "ALL OK" in out
+
+
 def test_pjit_train_step_all_families_small_mesh():
     """Every family's sharded train step lowers AND runs on a (2,2,2) mesh."""
     out = run_sub("""

@@ -68,6 +68,57 @@ def test_queue_dispatch_sweep(n_dest, capacity, size):
     np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
 
 
+def _numpy_queue_model(dest, n_dest, capacity):
+    """Independent NumPy model of the paper's queue mapping (Fig. 6): label
+    each key with the count of earlier same-destination keys, keep it iff
+    the label fits the buffer, preserve FIFO order."""
+    buffers = np.full((n_dest, capacity), -1, np.int64)
+    counts = np.zeros(n_dest, np.int64)
+    overflow = np.zeros(len(dest), bool)
+    for i, d in enumerate(dest):
+        if d < 0:
+            continue
+        if counts[d] < capacity:
+            buffers[d, counts[d]] = i
+            counts[d] += 1
+        else:
+            overflow[i] = True
+    return buffers, counts, overflow
+
+
+@pytest.mark.parametrize("skew", ["all_one_dest", "two_hot", "mixed_inactive"])
+def test_queue_dispatch_overflow_lanes(skew):
+    """Force buffer overflow and pin the overflow_ref path of the Pallas
+    kernel (and the jnp oracle) against the NumPy model: overflowed lanes
+    must be flagged, NEVER placed in any buffer slot, and never counted."""
+    n_dest, capacity, size = 4, 3, 40
+    rng = np.random.default_rng(17)
+    if skew == "all_one_dest":
+        dest = np.zeros(size, np.int32)  # every lane overflows past slot 2
+    elif skew == "two_hot":
+        dest = rng.choice(np.array([1, 2], np.int32), size)
+    else:  # inactive lanes interleaved with a hot destination
+        dest = rng.choice(np.array([-1, 0, 0, 0, 3], np.int32), size)
+    b_np, c_np, o_np = _numpy_queue_model(dest, n_dest, capacity)
+    assert o_np.any(), "scenario must actually overflow"
+
+    for use_ref in (False, True):
+        b, c, o = ops.queue_dispatch(
+            jnp.asarray(dest), n_dest=n_dest, capacity=capacity, use_ref=use_ref
+        )
+        tag = f"use_ref={use_ref}"
+        np.testing.assert_array_equal(np.asarray(b), b_np, err_msg=tag)
+        np.testing.assert_array_equal(np.asarray(c), c_np, err_msg=tag)
+        np.testing.assert_array_equal(np.asarray(o), o_np, err_msg=tag)
+        placed = np.asarray(b).reshape(-1)
+        placed = set(placed[placed >= 0].tolist())
+        # disjointness: a lane is either buffered or overflowed, never both
+        assert placed.isdisjoint(np.flatnonzero(o_np).tolist()), tag
+        kept = ~o_np & (dest >= 0)
+        assert placed == set(np.flatnonzero(kept).tolist()), tag
+        assert int(np.asarray(c).sum()) == int(kept.sum()), tag
+
+
 # ------------------------------------------------------------- flash_attention
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("BH,BHkv,Sq,Skv,d,causal,window", [

@@ -44,6 +44,10 @@ def test_bulk_delete_then_search():
     _probe(tree2, kv)
     v, f = T.search_reference(tree2, jnp.asarray(drop.astype(np.int32)))
     assert not np.any(np.asarray(f))
+    # scalar delete keeps working (np.unique used to coerce 0-d input)
+    tree3 = bulk_delete(tree2, int(keys[0]))
+    _, f = T.search_reference(tree3, jnp.asarray(keys[:1].astype(np.int32)))
+    assert not bool(np.asarray(f)[0])
 
 
 @given(
@@ -87,3 +91,90 @@ def test_engine_serves_updated_tree():
     eng2 = BSTEngine(sk, sv, PAPER_CONFIGS["Hyb8q"])
     v, f = eng2.lookup(np.array([1], np.int32))
     assert bool(f[0]) and int(v[0]) == 42
+
+
+# ---------------------------------------------------- compaction invariants
+def assert_layout_invariants(tree):
+    """Every layout contract the ordered ops depend on (DESIGN.md §6/§7).
+
+    The jnp compaction path rebuilds these BY CONSTRUCTION; this pins them
+    explicitly so a future merge/re-layout bug cannot slip through a test
+    that only samples queries:
+
+      * perfect-tree shape, minimal height for ``n_real``;
+      * the in-order view (gather through rank_to_bfs) is strictly sorted
+        with all sentinels packed at the top ranks -- the substrate of the
+        rank arithmetic;
+      * the BFS image is exactly the Eytzinger gather of that sorted view,
+        i.e. rank -> BFS and BFS -> rank are inverse bijections;
+      * the BST ordering of the BFS layout itself (every descent's
+        compare-branch correctness).
+    """
+    keys = np.asarray(tree.keys)
+    n = keys.size
+    assert n == (1 << (tree.height + 1)) - 1, "not a perfect tree"
+    assert tree.height == T.height_for(tree.n_real), "height not minimal"
+    assert int((keys != T.SENTINEL_KEY).sum()) == tree.n_real
+
+    r2b = T.rank_to_bfs_indices(tree.height)
+    b2r = T.bfs_inorder_ranks(tree.height)
+    view = keys[r2b]
+    assert np.all(np.diff(view[: tree.n_real].astype(np.int64)) > 0), (
+        "in-order view not strictly sorted"
+    )
+    assert np.all(view[tree.n_real :] == T.SENTINEL_KEY), (
+        "sentinels not packed at the top ranks"
+    )
+    # rank<->BFS bijection + Eytzinger layout == gather of the sorted view
+    assert np.array_equal(r2b[b2r], np.arange(n))
+    assert np.array_equal(keys, view[b2r])
+    # BST property in BFS indexing (int64 to keep sentinel compares exact)
+    k64 = keys.astype(np.int64)
+    parents = (np.arange(1, n) - 1) // 2
+    left = np.arange(1, n, 2)
+    right = np.arange(2, n, 2)
+    assert np.all(k64[left] <= k64[parents[left - 1]])
+    assert np.all(k64[right] >= k64[parents[right - 1]])
+
+
+def test_bulk_ops_reestablish_layout_invariants():
+    keys, values = make_tree_data(700, seed=6)
+    tree = T.build_tree(keys, values)
+    assert_layout_invariants(tree)
+    tree = bulk_insert(tree, np.arange(1, 101, 2, np.int32), np.arange(50, dtype=np.int32))
+    assert_layout_invariants(tree)
+    tree = bulk_delete(tree, keys[::3])
+    assert_layout_invariants(tree)
+
+
+def test_jnp_compaction_invariants_after_every_merge():
+    """A random insert/delete stream through the delta engine: after EVERY
+    compaction the new snapshot must satisfy all layout invariants."""
+    keys, values = make_tree_data(300, seed=8)
+    cfg = EngineConfig(strategy="hrz", delta_capacity=16, delta_high_water=12)
+    eng = BSTEngine(keys, values, cfg)
+    oracle = dict(zip(keys.tolist(), values.tolist()))
+    rng = np.random.default_rng(13)
+    compactions_seen = 0
+    for step in range(8):
+        nk = rng.integers(1, 900, 10).astype(np.int32)
+        nv = rng.integers(0, 10**6, 10).astype(np.int32)
+        dk = rng.choice(np.array(sorted(oracle), np.int32), 3)
+        eng.apply_updates(insert_keys=nk, insert_values=nv, delete_keys=dk)
+        for k in np.unique(dk).tolist():
+            oracle.pop(k, None)
+        last = {}
+        for k, v in zip(nk.tolist(), nv.tolist()):
+            last[k] = v
+        oracle.update(last)
+        if eng.compactions != compactions_seen:
+            compactions_seen = eng.compactions
+            assert_layout_invariants(eng.tree)
+            sk, sv = sorted_view(eng.tree)
+            assert sk.tolist() == sorted(oracle)
+            assert sv.tolist() == [oracle[k] for k in sorted(oracle)]
+    assert compactions_seen >= 2, "stream never exercised compaction"
+    eng.compact()
+    assert_layout_invariants(eng.tree)
+    sk, sv = sorted_view(eng.tree)
+    assert sk.tolist() == sorted(oracle)
