@@ -18,11 +18,16 @@ measure executed semantics on CPU, not TPU performance (DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Row, time_fn
+from repro.core import plans as plans_lib
+from repro.core import tree as tree_lib
 from repro.core.engine import BSTEngine, PAPER_CONFIGS
 from repro.data.keysets import make_key_sets, make_tree_data
 from repro.serving import BSTServer
@@ -40,9 +45,10 @@ def _time_op(eng: BSTEngine, op: str, q, q_hi, warmup=1, iters=3) -> float:
 
 
 def run(n_keys=(1 << 16) - 1, batch=16384, kernel_batch=2048) -> List[Row]:
-    # batch sized so the direct-mapped engines (whose stateless dispatch is
-    # deliberately faithful-but-slow on CPU; see DESIGN.md §2) finish in
-    # seconds -- keys/s is batch-size stable for the others.
+    # batch sized so the retired-driver baseline rows (hyb_kernel_vs_driver
+    # below -- the one place the old O(B * n * capacity) direct dispatch
+    # still runs, as the regression-gate baseline) finish in seconds;
+    # keys/s is batch-size stable for the engines themselves.
     keys, values = make_tree_data(n_keys, seed=0)
     rows: List[Row] = []
     engines = {n: BSTEngine(keys, values, c) for n, c in PAPER_CONFIGS.items()}
@@ -108,7 +114,109 @@ def run(n_keys=(1 << 16) - 1, batch=16384, kernel_batch=2048) -> List[Row]:
             )
         )
 
+    rows.extend(hyb_kernel_vs_driver_rows(keys, values, batch=kernel_batch))
     rows.extend(mixed_rw_rows(keys, values, batch=min(batch, 8192)))
+    return rows
+
+
+def _retired_hyb_driver(tree, n_trees: int, mapping: str, slack: float = 2.0):
+    """The RETIRED driver-level hyb composition, reconstructed from the
+    shared phase functions (route -> jnp dispatch -> gather -> forest-kernel
+    subtree descent -> combine -> jnp stall round).  It exists ONLY here,
+    as the regression-gate baseline recorded in every BENCH_*.json run:
+    the engine itself now lowers the whole pipeline through the single
+    forest ``pallas_call`` (DESIGN.md §8), and CI fails if that in-kernel
+    path ever drops below this composition's throughput.
+    """
+    split = int(math.log2(n_trees))
+    idx = tree_lib.all_subtree_gather_indices(tree.height, split)
+    fk, fv = tree.keys[jnp.asarray(idx)], tree.values[jnp.asarray(idx)]
+    reg_n = (1 << max(split, 1)) - 1
+    rk, rv = tree.keys[:reg_n], tree.values[:reg_n]
+    sub_h = tree.height - split
+
+    def run(queries):
+        B = queries.shape[0]
+        dest, reg_val, reg_found = plans_lib.route_phase(rk, rv, queries, split)
+        capacity = int(math.ceil(B / n_trees * slack))
+        dplan = plans_lib.dispatch_phase(
+            mapping, dest, n_trees, capacity, active=~reg_found
+        )
+        per_q, per_act = plans_lib.gather_phase(queries, dplan)
+        sub_v, sub_f = plans_lib.descend_phase(
+            fk, fv, sub_h, per_q, per_act, use_kernel=True, interpret=True
+        )
+        val, found = plans_lib.combine_phase(
+            sub_v, sub_f, dplan, B, reg_val, reg_found
+        )
+
+        def retry(args):
+            val, found = args
+            r_val, r_found = tree_lib.search_reference(tree, queries)
+            return (
+                jnp.where(dplan.overflow, r_val, val),
+                jnp.where(dplan.overflow, r_found, found),
+            )
+
+        return jax.lax.cond(
+            jnp.any(dplan.overflow), retry, lambda a: a, (val, found)
+        )
+
+    return jax.jit(run)
+
+
+def hyb_kernel_vs_driver_rows(keys, values, batch: int) -> List[Row]:
+    """Hyb in-kernel pipeline vs the retired driver composition, same run.
+
+    Two rows per hyb preset, tagged ``pair=<name>``: ``hyb_kernel`` is the
+    engine's real path (route + dispatch + descent + stall replay in ONE
+    ``pallas_call``), ``hyb_driver`` the retired composition above.  CI's
+    regression gate (scripts/check_bench.py) reads these pairs out of
+    BENCH_4.json and fails when the kernel path is the slower one.
+    """
+    rng = np.random.default_rng(5)
+    q = rng.choice(np.concatenate([keys, keys + 1]), batch).astype(np.int32)
+    tree = tree_lib.build_tree(np.asarray(keys), np.asarray(values))
+    rows: List[Row] = []
+    for name, cfg in PAPER_CONFIGS.items():
+        if cfg.strategy != "hyb":
+            continue
+        plan = plans_lib.make_plan(
+            tree, strategy="hyb", n_trees=cfg.n_trees, mapping=cfg.mapping
+        )
+        ker = jax.jit(
+            lambda qq, plan=plan: plans_lib.execute_plan(
+                plan, qq, use_kernel=True, interpret=True
+            )
+        )
+        drv = _retired_hyb_driver(tree, cfg.n_trees, cfg.mapping)
+        qj = jnp.asarray(q)
+        # both paths must agree before either is worth timing -- the gate
+        # downstream assumes the rows measure equivalent work
+        kv, kf = ker(qj)
+        dv, df = drv(qj)
+        bad = int(
+            np.sum(np.asarray(kv) != np.asarray(dv))
+            + np.sum(np.asarray(kf) != np.asarray(df))
+        )
+        if bad:
+            raise RuntimeError(
+                f"{name}: in-kernel hyb path disagrees with the retired "
+                f"driver composition on {bad} lanes -- refusing to record "
+                "a kernel-vs-driver pair for non-equivalent work"
+            )
+        for kind, fn in (("hyb_kernel", ker), ("hyb_driver", drv)):
+            us = time_fn(fn, qj, warmup=1, iters=5)
+            rows.append(
+                Row(
+                    name=f"engine/random/{name}/{kind}",
+                    us_per_call=us,
+                    derived=(
+                        f"keys_per_sec={batch / (us / 1e6):.3e};"
+                        f"batch={batch};pair={name}"
+                    ),
+                )
+            )
     return rows
 
 

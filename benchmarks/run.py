@@ -12,8 +12,10 @@
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 Subset : ``PYTHONPATH=src python -m benchmarks.run --only fig7,engine``
 Quick  : ``PYTHONPATH=src python -m benchmarks.run --quick``
-JSON   : add ``--json results.json`` to also dump the rows as a machine-
-         readable artifact (what CI uploads per run).
+JSON   : add ``--json BENCH_4.json`` to also dump the rows as a schema-
+         checked machine-readable artifact (what CI uploads per run;
+         scripts/check_bench.py layers the hyb kernel-vs-driver
+         regression gate on top of the same file).
 """
 
 from __future__ import annotations
@@ -22,6 +24,38 @@ import argparse
 import json
 import sys
 import traceback
+
+# The machine-readable artifact contract (BENCH_*.json).  scripts/
+# check_bench.py re-validates the same schema on the consumer side and
+# layers the hyb kernel-vs-driver regression gate on top.
+SCHEMA = "bench-rows/v1"
+
+
+def validate_rows(records) -> None:
+    """Schema-check the JSON rows before they are written anywhere.
+
+    Every record is exactly ``{suite, name, us_per_call, derived}`` with a
+    non-negative timing and a ``key=value`` ``;``-separated derived payload
+    -- the shape every downstream consumer (CI gates, dashboards) parses.
+    """
+    if not isinstance(records, list) or not records:
+        raise SystemExit("bench JSON: no rows to write")
+    for r in records:
+        if set(r) != {"suite", "name", "us_per_call", "derived"}:
+            raise SystemExit(f"bench JSON: bad record keys {sorted(r)}")
+        if not (isinstance(r["suite"], str) and r["suite"]):
+            raise SystemExit(f"bench JSON: bad suite in {r}")
+        if not (isinstance(r["name"], str) and r["name"]):
+            raise SystemExit(f"bench JSON: bad name in {r}")
+        if not isinstance(r["us_per_call"], (int, float)) or r["us_per_call"] < 0:
+            raise SystemExit(f"bench JSON: bad us_per_call in {r}")
+        if not isinstance(r["derived"], str):
+            raise SystemExit(f"bench JSON: bad derived in {r}")
+        for part in filter(None, r["derived"].split(";")):
+            if "=" not in part:
+                raise SystemExit(
+                    f"bench JSON: derived part {part!r} is not key=value ({r})"
+                )
 
 
 def main() -> None:
@@ -80,9 +114,19 @@ def main() -> None:
             print(f"{name},0.0,ERROR={type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump({"quick": args.quick, "rows": records}, f, indent=1)
-        print(f"wrote {len(records)} rows to {args.json}", file=sys.stderr)
+        if records:
+            validate_rows(records)
+            with open(args.json, "w") as f:
+                json.dump(
+                    {"schema": SCHEMA, "quick": args.quick, "rows": records},
+                    f,
+                    indent=1,
+                )
+            print(f"wrote {len(records)} rows to {args.json}", file=sys.stderr)
+        elif not failures:
+            raise SystemExit("bench JSON: no rows produced")
+        # with failures and zero rows, fall through: the suite-failure exit
+        # below is the real error, and no stale/empty artifact is written
     if failures:
         raise SystemExit(f"{failures} suite(s) failed")
 

@@ -1,0 +1,118 @@
+"""Gatekeeper for the benchmark artifact (BENCH_*.json).
+
+Three checks, all against the SAME run's file -- no cross-run baselines to
+go stale:
+
+  1. schema: the file matches ``bench-rows/v1`` (re-validated here on the
+     consumer side; ``benchmarks/run.py`` already checks it at write time);
+  2. coverage: the engine suite must emit ordered-op rows (DESIGN.md §6),
+     mixed read/write serving rows (§7) and hyb kernel-vs-driver pairs
+     (§8) -- a silently dropped row family is a failure, not a skip;
+  3. regression gate: for every ``pair=<name>`` tag, the in-kernel hyb
+     path (``hyb_kernel``) must not be slower than the retired
+     driver-level composition (``hyb_driver``) recorded in the same run
+     (beyond ``JITTER_TOLERANCE`` of timing noise).  The driver path was
+     deleted from the engine precisely because the kernel path beat it;
+     this gate keeps that true.
+
+Usage: ``python scripts/check_bench.py BENCH_4.json``
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+# The per-pair gate trips only when the kernel path is slower than the
+# driver by more than runner jitter: both timings are interpret-mode
+# medians on a shared CI box, and the queue-pair margins are 2.6-4.1x
+# (BENCH_4.json), so 10% headroom cannot hide a genuine regression -- it
+# only keeps a noise flip from hard-failing the pipeline.
+JITTER_TOLERANCE = 1.10
+# The direct-mapped pairs carry ~300-450x headroom because their baseline
+# is the retired driver's deliberately pathological O(B*n*capacity)
+# dispatch -- against that, the pair gate alone is vacuous.  The sibling
+# bound closes the hole: each direct kernel row must stay within this
+# factor of its queue sibling (HybN vs HybNq, same run; today they are
+# within ~2x of each other), so a direct-path blow-up (e.g. the
+# shifted-compare clash loop regressing to quadratic) fails CI even
+# though the retired baseline never would catch it.
+SIBLING_TOLERANCE = 25.0
+
+
+def derived_dict(row) -> dict:
+    return dict(
+        part.split("=", 1) for part in filter(None, row["derived"].split(";"))
+    )
+
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main(path: str) -> None:
+    sys.path.insert(0, os.path.join(REPO_ROOT, "benchmarks"))
+    from run import SCHEMA, validate_rows  # the single schema definition
+
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != SCHEMA:
+        raise SystemExit(f"{path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    rows = doc.get("rows", [])
+    validate_rows(rows)
+
+    # --- coverage: the row families CI watches must actually exist
+    ordered = [
+        r for r in rows
+        if any(f"/{op}" in r["name"]
+               for op in ("predecessor", "range_count", "range_scan"))
+    ]
+    if not ordered:
+        raise SystemExit("no ordered-op benchmark rows emitted")
+    mixed = {m for r in rows for m in ("90_10", "50_50") if m in r["name"]}
+    if mixed != {"90_10", "50_50"}:
+        raise SystemExit(f"missing mixed read/write rows (got {sorted(mixed)})")
+    for r in rows:
+        if "/mixed_" in r["name"] and "compactions" not in derived_dict(r):
+            raise SystemExit(f"mixed row without compactions: {r['name']}")
+
+    # --- hyb kernel-vs-driver regression gate (same-run baseline)
+    pairs: dict = {}
+    for r in rows:
+        d = derived_dict(r)
+        if "pair" in d:
+            kind = r["name"].rsplit("/", 1)[-1]
+            pairs.setdefault(d["pair"], {})[kind] = r["us_per_call"]
+    complete = {
+        p: v for p, v in pairs.items() if {"hyb_kernel", "hyb_driver"} <= set(v)
+    }
+    if not complete:
+        raise SystemExit("no hyb kernel-vs-driver pairs in the artifact")
+    failures = []
+    for name, v in sorted(complete.items()):
+        speedup = v["hyb_driver"] / v["hyb_kernel"]
+        print(f"hyb gate {name}: kernel {v['hyb_kernel']:.0f}us vs "
+              f"driver {v['hyb_driver']:.0f}us ({speedup:.2f}x)")
+        if v["hyb_kernel"] > v["hyb_driver"] * JITTER_TOLERANCE:
+            failures.append(name)
+    for name, v in sorted(complete.items()):
+        sibling = name + "q"  # HybN's queue twin, timed in the same run
+        if sibling in complete:
+            bound = complete[sibling]["hyb_kernel"] * SIBLING_TOLERANCE
+            if v["hyb_kernel"] > bound:
+                failures.append(f"{name} (vs {sibling} sibling bound)")
+    if failures:
+        raise SystemExit(
+            f"hyb kernel path slower than the retired driver baseline "
+            f"(or its queue sibling's bound): {failures}"
+        )
+    print(f"{path}: schema + coverage + hyb gate OK "
+          f"({len(rows)} rows, {len(complete)} pairs)")
+
+
+if __name__ == "__main__":
+    main(
+        sys.argv[1]
+        if len(sys.argv) > 1
+        else os.path.join(REPO_ROOT, "BENCH_4.json")
+    )

@@ -28,6 +28,16 @@ Model, mapped 1:1 from §II:
     write_ptr + label where label counts earlier same-destination keys in the
     chunk (paper Fig. 6).
 
+Stall accounting: a cycle is stalled exactly when the frontend cannot fetch
+a new chunk because keys of the previous chunk are still waiting for buffer
+slots after that cycle's placement pass.  The cycle a chunk enters is never
+a stall (a fetch happened), and the cycle its last deferred key places is
+not either -- the frontend resumes and fetches the next chunk in the same
+cycle.  Both mappings share one placement rule and one departure rate
+(<= PORTS buffered keys per subtree per cycle, drainable the cycle after
+they are written), so queue vs direct differ only in which slot a key may
+occupy -- the paper's actual distinction.
+
 The simulator is plain NumPy/Python on purpose: it is a *model checker* for
 the hardware semantics, not a performance path.  The performance path is
 core/engine.py + kernels/.
@@ -132,11 +142,32 @@ def _simulate_hybrid(
     stall_cycles = 0
     cycle = 0
 
+    def try_place(ci: int, d: int) -> bool:
+        """One buffer-write attempt -- the ONE placement rule both mappings
+        share, so queue and direct mode cannot drift apart in admission
+        semantics (they differ only in which slot a key may occupy)."""
+        if queue_mode:
+            if counts[d] < capacity:
+                counts[d] += 1
+                return True
+            return False
+        if not occupied[d, ci]:
+            occupied[d, ci] = True
+            return True
+        return False
+
     while admitted < K:
         cycle += 1
         if cycle > max_cycles:
             raise RuntimeError(f"{config.name}: no convergence in {max_cycles} cycles")
-        # ---- 1) subtree ports drain buffers (2 keys per subtree per cycle)
+        # ---- 1) subtree ports drain buffers (2 keys per subtree per cycle).
+        # Departure semantics are identical across mappings: every subtree
+        # admits at most PORTS buffered keys per cycle, and keys written in
+        # this cycle's frontend pass (steps 2/3) become drainable next
+        # cycle -- the queue path decrements aggregate occupancy, the
+        # direct path clears the two earliest occupied slots ("the key
+        # which comes earlier in the buffer is selected", paper §II.C.3),
+        # but the per-cycle departure count is the same.
         if queue_mode:
             drained = np.minimum(counts, PORTS)
             admitted += int(drained.sum())
@@ -145,8 +176,6 @@ def _simulate_hybrid(
             counts -= drained
         else:
             for s in range(N):
-                # Dual ports fetch the two earliest-slot keys (paper: "the key
-                # which comes earlier in the buffer is selected").
                 occ = occupied[s]
                 nz = np.flatnonzero(occ)
                 take = nz[:PORTS]
@@ -154,25 +183,21 @@ def _simulate_hybrid(
                     occ[take] = False
                     admitted += int(take.size)
                     last_admit_cycle = cycle
-        # ---- 2) frontend: place pending keys first; stall while any remain
+        # ---- 2) frontend: place pending keys first.  A cycle is a STALL
+        # exactly when the frontend cannot fetch a new chunk because keys
+        # are still waiting for buffer slots after this pass (paper
+        # §II.C.3: "fetching [the] new chunk stalls until all the keys of
+        # the current chunk are stored").  The entry cycle itself is NOT a
+        # stall -- a chunk was fetched then -- and the cycle in which the
+        # last pending key places is not either: the frontend resumes and
+        # fetches the next chunk in the same cycle (fall through below).
+        # Counting the entry cycle AND the blocked passes double-booked
+        # every deferral episode by one cycle of both stall and latency.
         if pending:
-            still = []
-            for ci, d in pending:
-                if queue_mode:
-                    if counts[d] < capacity:
-                        counts[d] += 1
-                    else:
-                        still.append((ci, d))
-                else:
-                    if not occupied[d, ci]:
-                        occupied[d, ci] = True
-                    else:
-                        still.append((ci, d))
-            pending = still
+            pending = [(ci, d) for ci, d in pending if not try_place(ci, d)]
             if pending:
                 stall_cycles += 1
-                continue  # frontend stalled: no new chunk this cycle
-            continue  # chunk finished placing; new chunk starts next cycle
+                continue  # frontend blocked: no fetch this cycle
         # ---- 3) new chunk enters the register layer
         if next_key >= K:
             continue
@@ -185,20 +210,11 @@ def _simulate_hybrid(
         if reg_hits:
             admitted += reg_hits
             last_admit_cycle = cycle
-        incoming = [(int(ci), int(d)) for ci, d in zip(range(len(idxs)), dests) if d >= 0]
-        for ci, d in incoming:
-            if queue_mode:
-                if counts[d] < capacity:
-                    counts[d] += 1
-                else:
-                    pending.append((ci, d))
-            else:
-                if not occupied[d, ci]:
-                    occupied[d, ci] = True
-                else:
-                    pending.append((ci, d))
-        if pending:
-            stall_cycles += 1
+        pending = [
+            (int(ci), int(d))
+            for ci, d in zip(range(len(idxs)), dests)
+            if d >= 0 and not try_place(int(ci), int(d))
+        ]
 
     cycles = last_admit_cycle + latency
     return SimResult(

@@ -9,7 +9,9 @@ PAPERS.md): pending upserts and tombstones accumulate in a small sorted
 bulk **compaction** merges the buffer into a fresh perfect snapshot when it
 crosses a high-water mark.  The deeply pipelined search datapath of the
 source paper stays untouched -- the buffer simply rides the forest
-``pallas_call`` as one extra (tiny) operand, like the register layer does.
+``pallas_call`` as one extra (tiny) operand, like the register layer does,
+for EVERY single-chip strategy (hyb resolves it inside the same kernel
+pass as its dispatch/replay pipeline, DESIGN.md §8).
 
 Entry resolution per query: ``delta-hit > tombstone > tree-hit``.  Each
 entry records, at ingest time, whether its key exists in the backing
@@ -184,8 +186,10 @@ def resolve(
 
     The jnp rendition of what the forest kernel computes in-``pallas_call``
     when the buffer rides as an operand (same math, property-tested
-    bit-identical); drivers that compose above the kernel (hybrid's
-    register/subtree merge, the distributed return path) call this one.
+    bit-identical).  Every single-chip strategy -- hyb included since
+    DESIGN.md §8 -- resolves in-kernel; the one remaining driver-level
+    caller is the distributed return path, which folds the replicated
+    buffer after the packed collective.
     """
     hit, dead, value, wbelow = kref.bst_delta_resolve_ref(
         *operands(delta), queries

@@ -21,10 +21,12 @@ batch is stall-free but sends B x M keys; smaller capacities send less and
 handle overflow with an extra "stall round", faithfully mirroring the
 paper's throughput/buffer-size trade-off.
 
-Every pipeline phase here (route / dispatch / descend / combine) is the
-SAME implementation the single-chip ``BSTEngine`` runs -- imported from
-``core/plans.py`` -- so this module only contributes the collectives and
-the sharding (DESIGN.md §4).
+Every pipeline phase here (route / dispatch / descend / combine) comes
+from ``core/plans.py``, so this module only contributes the collectives
+and the sharding (DESIGN.md §4).  Since §8 this is the ONE driver that
+still composes the phases: the single-chip engine runs the whole hybrid
+pipeline inside the forest kernel, but here dispatch IS a pair of
+``all_to_all`` collectives, which no kernel body can absorb.
 
 The entry point is ``make_distributed_query`` -- the same ``query(op, ...)``
 contract as ``BSTEngine.query`` (DESIGN.md §6): the ordered descent runs

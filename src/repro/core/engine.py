@@ -65,6 +65,24 @@ class EngineConfig:
     delta_capacity: int = 0
     delta_high_water: Optional[int] = None  # default: 3/4 of the capacity
 
+    def __post_init__(self) -> None:
+        if self.delta_capacity < 0:
+            raise ValueError(
+                f"delta_capacity must be >= 0 (got {self.delta_capacity}); "
+                "0 disables the write path"
+            )
+        if (
+            self.delta_capacity > 0
+            and self.delta_high_water is not None
+            and not 1 <= self.delta_high_water <= self.delta_capacity
+        ):
+            raise ValueError(
+                f"delta_high_water={self.delta_high_water} must lie in "
+                f"[1, delta_capacity={self.delta_capacity}] -- a mark above "
+                "the capacity could never trigger compaction and the buffer "
+                "would overflow"
+            )
+
     def resolved_register_levels(self) -> int:
         return plans_lib.resolved_register_levels(self.n_trees, self.register_levels)
 
@@ -206,16 +224,20 @@ class BSTEngine:
         (True = tombstone; the value lane is ignored), ``valid`` an
         optional bool mask for padding lanes (fixed jit shapes upstream).
         Requires ``delta_capacity > 0``.  The buffer absorbs the batch on
-        device; compaction (a bulk merge into a fresh snapshot) triggers
-        when occupancy would exceed the capacity or crosses the high-water
-        mark -- never mid-batch, so readers always see a consistent
-        snapshot + buffer pair.
+        device; a batch larger than the capacity is chunked through
+        interleaved compactions (every chunk's valid-lane count fits the
+        buffer by construction, and a compaction runs before any chunk
+        that would push occupancy past the capacity), so a single
+        oversized batch can never overflow the buffer between triggers.
+        The high-water mark additionally compacts after the batch -- never
+        mid-chunk, so readers always see a consistent snapshot + buffer
+        pair.
         """
         if self.delta is None:
             raise ValueError(
-                "write path disabled: construct the engine with "
-                "EngineConfig(delta_capacity > 0), or use core.updates "
-                "bulk maintenance + snapshot swap"
+                "write path disabled (delta_capacity == 0): construct the "
+                "engine with EngineConfig(delta_capacity > 0), or use "
+                "core.updates bulk maintenance + snapshot swap"
             )
         keys = np.atleast_1d(np.asarray(keys, np.int32))
         values = np.atleast_1d(np.asarray(values, np.int32))
@@ -227,11 +249,13 @@ class BSTEngine:
             if valid is None
             else np.atleast_1d(np.asarray(valid, bool))
         )
+        if valid.shape != keys.shape:
+            raise ValueError("valid mask must match the batch shape")
         cap = self.config.delta_capacity
         high = self.config.resolved_high_water()
         for lo in range(0, keys.size, cap):
             sl = slice(lo, lo + cap)
-            m = int(valid[sl].sum())
+            m = int(valid[sl].sum())  # <= cap: the slice is cap lanes long
             if m == 0:
                 continue
             if self._pending_writes + m > cap:
@@ -243,7 +267,11 @@ class BSTEngine:
                 jnp.asarray(deletes[sl]),
                 jnp.asarray(valid[sl]),
             )
+            # _pending_writes upper-bounds buffer occupancy (ingest dedups,
+            # so the true count can only be lower); the invariant the chunk
+            # loop maintains is _pending_writes <= cap at every step.
             self._pending_writes += m
+            assert self._pending_writes <= cap
         if self._pending_writes >= high:
             self.compact()
 

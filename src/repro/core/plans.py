@@ -11,11 +11,15 @@ mapping) and the pipeline phases
     descend_phase  -- forest-batched subtree descent (Pallas kernel or oracle)
     combine_phase  -- scatter buffered results back into chunk order
 
-are plain functions shared by BOTH drivers: the single-chip ``BSTEngine``
-and the multi-chip ``all_to_all`` engine in ``core/distributed.py``.  The
-drivers differ only in what sits between the phases (nothing, or a pair of
-collectives) -- exactly the FPGA situation, where one datapath serves every
-BRAM partitioning.
+are plain functions.  Since DESIGN.md §8 the single-chip driver no longer
+composes them: every strategy -- hyb included -- lowers straight through
+the one forest call (``_hybrid_descend`` selects the kernel's dispatch
+configuration, so route/dispatch/descent/stall-replay/delta all run inside
+the ``pallas_call`` or its jnp twin).  The phase functions remain the
+shared vocabulary of the drivers whose dispatch crosses a real boundary:
+the multi-chip ``all_to_all`` engine in ``core/distributed.py`` (a pair of
+collectives between dispatch and descent) and the roofline lowering in
+``launch/dryrun_bst.py``.
 
 The datapath is ORDERED (DESIGN.md §6): every phase has an ``_ordered``
 variant carrying the full ``OrderedResult`` (exact match + strict
@@ -60,16 +64,22 @@ def validate_op(op: str, has_hi: bool) -> None:
 class SearchPlan:
     """Static per-engine search configuration (built once, looked up often).
 
-    forest_keys/forest_values: (n_rows, m) flat level-major (sub)trees --
-    the single tree for hrz/dup (n_rows == 1), one row per vertical subtree
-    for hyb.  ``shared_tree`` marks dup's replication-without-copy: every
-    kernel grid row reads operand row 0.  ``split_level > 0`` enables the
-    register-layer route -> buffer dispatch pipeline (hyb).  ``full_tree``
-    (every strategy) backs hyb's stall-round oracle and the ordered ops'
-    sorted-view gathers; ``rank_to_bfs`` maps in-order rank -> BFS index so
-    range_scan reads consecutive ranks straight out of the flat layout
+    forest_keys/forest_values: (n_rows, m) flat level-major trees -- one
+    row for every single-chip strategy: hrz and hyb carry the full tree
+    (for hyb, levels [0, split_level) double as the register layer and
+    each vertical subtree is a BRAM slice of the same flat image --
+    DESIGN.md §8), dup shares its one row across replicas.
+    ``shared_tree`` marks dup's replication-without-copy: every kernel
+    grid row reads operand row 0.  ``split_level``/``mapping``/
+    ``buffer_slack`` parameterize hyb's in-kernel dispatch (paper
+    §II.C.3).  ``full_tree`` (every strategy) backs the ordered ops'
+    sorted-view gathers; ``rank_to_bfs`` maps in-order rank -> BFS index
+    so range_scan reads consecutive ranks straight out of the flat layout
     (the delta epilogues' sorted view is the same gather, traced on demand
     inside ``ordered_query`` so read-only plans never materialize it).
+    ``reg_keys``/``reg_values`` remain only for multi-chip drivers that
+    replicate the register layer explicitly (``core/distributed.py``
+    builds its own; single-chip hyb reads it out of the flat operand).
     """
 
     strategy: str  # hrz | dup | hyb
@@ -157,21 +167,20 @@ def make_plan(
     split_level = int(math.log2(n_trees))
     if (1 << split_level) != n_trees:
         raise ValueError("n_trees must be a power of two")
-    # Register layer = levels [0, split_level); subtrees hang below.
-    idx = tree_lib.all_subtree_gather_indices(tree.height, split_level)
-    reg_n = (1 << max(split_level, 1)) - 1
+    # One flat operand carries the whole pipeline (DESIGN.md §8): levels
+    # [0, split_level) double as the register layer and each vertical
+    # subtree is a BRAM slice of the same level-major image, so the hybrid
+    # kernel (and its jnp twin) needs no per-subtree gather at build time.
     return SearchPlan(
         strategy="hyb",
-        forest_keys=tree.keys[jnp.asarray(idx)],
-        forest_values=tree.values[jnp.asarray(idx)],
-        forest_height=tree.height - split_level,
+        forest_keys=tree.keys[None, :],
+        forest_values=tree.values[None, :],
+        forest_height=tree.height,
         n_trees=n_trees,
         shared_tree=False,
         split_level=split_level,
         mapping=mapping,
         buffer_slack=buffer_slack,
-        reg_keys=tree.keys[:reg_n],
-        reg_values=tree.values[:reg_n],
         full_tree=tree,
         rank_to_bfs=rank_to_bfs,
     )
@@ -388,6 +397,53 @@ def where_ordered(
 
 
 # -------------------------------------------------------------------- drivers
+# The kernel dispatches each block_q chunk independently (the FPGA streams
+# chunks); the jnp twin treats the whole batch as one chunk, the retired
+# driver's granularity.  Results are identical either way -- the stall
+# round's contract -- so the choice is purely a throughput model.
+KERNEL_BLOCK_Q = 512
+
+
+def hyb_capacity(plan: SearchPlan, chunk: int) -> int:
+    """Per-subtree dispatch-buffer depth for a ``chunk``-lane frontend:
+    the fair share ``chunk / n_trees`` scaled by the plan's slack."""
+    return max(1, int(math.ceil(chunk / plan.n_trees * plan.buffer_slack)))
+
+
+def _hybrid_descend(
+    plan: SearchPlan,
+    queries: jax.Array,
+    *,
+    ordered: bool,
+    use_kernel: bool,
+    interpret: bool,
+    delta: Optional[Tuple[jax.Array, ...]],
+) -> Tuple[jax.Array, ...]:
+    """Single-chip hyb: the WHOLE pipeline in one call (DESIGN.md §8).
+
+    Register route, queue/direct dispatch, subtree descent, stall-round
+    replay and delta resolution all execute inside the forest
+    ``pallas_call`` (``use_kernel=True``) or its structurally matching jnp
+    oracle -- there is no driver-level composition (and no driver-level
+    delta twin) left to drift.
+    """
+    chunk = KERNEL_BLOCK_Q if use_kernel else queries.shape[0]
+    return kops.bst_hybrid_forest(
+        plan.full_tree.keys,
+        plan.full_tree.values,
+        queries,
+        height=plan.full_tree.height,
+        split_level=plan.split_level,
+        mapping=plan.mapping,
+        capacity=hyb_capacity(plan, chunk),
+        block_q=KERNEL_BLOCK_Q,
+        interpret=interpret,
+        ordered=ordered,
+        use_ref=not use_kernel,
+        delta=delta,
+    )
+
+
 def execute_plan_ordered(
     plan: SearchPlan,
     queries: jax.Array,
@@ -400,15 +456,14 @@ def execute_plan_ordered(
 
     Returns the full per-query ``OrderedResult`` -- the common substrate
     every query op's epilogue reads (``ordered_query``).  All strategies
-    descend through the one forest-batched kernel / oracle.
+    descend through the one forest-batched kernel / oracle; hyb's route /
+    dispatch / descent / stall replay execute inside that same call
+    (DESIGN.md §8).
 
     With ``delta`` (DESIGN.md §7) value/found/rank come back merged
-    against the pending write buffer.  For hrz/dup every query occupies
-    exactly one kernel lane, so the buffer rides the ``pallas_call``
-    itself; under hybrid partitioning a query's path is split between the
-    register layer and one subtree (plus the stall round), so the buffer
-    resolution composes once at this driver level instead -- same math,
-    the kernel's jnp twin (``delta_lib.resolve``).
+    against the pending write buffer.  Every strategy resolves the buffer
+    inside the descent call itself -- the driver never composes a jnp
+    twin on top.
     """
     B = queries.shape[0]
     d_ops = None if delta is None else delta_lib.operands(delta)
@@ -441,39 +496,18 @@ def execute_plan_ordered(
         )
         return OrderedResult(*(f.reshape(-1)[:B] for f in res))
 
-    # hyb: route -> dispatch -> descend -> combine + merge (+ stall round).
-    dest, reg = route_phase_ordered(
-        plan.reg_keys,
-        plan.reg_values,
-        queries,
-        plan.split_level,
-        plan.full_tree.height,
+    # hyb: route + dispatch + descent + stall replay + delta merge, all
+    # inside the one forest call (DESIGN.md §8).
+    return OrderedResult(
+        *_hybrid_descend(
+            plan,
+            queries,
+            ordered=True,
+            use_kernel=use_kernel,
+            interpret=interpret,
+            delta=d_ops,
+        )
     )
-    active = ~reg.found
-    capacity = int(math.ceil(B / plan.n_trees * plan.buffer_slack))
-    dplan = dispatch_phase(plan.mapping, dest, plan.n_trees, capacity, active=active)
-    per_sub_q, per_sub_active = gather_phase(queries, dplan)
-    sub = descend_phase_ordered(
-        plan.forest_keys,
-        plan.forest_values,
-        plan.forest_height,
-        per_sub_q,
-        per_sub_active,
-        use_kernel=use_kernel,
-        interpret=interpret,
-    )
-    res = merge_ordered(reg, combine_phase_ordered(sub, dplan, B))
-
-    def retry(res):
-        # Stall round: the overflowed minority re-descends the whole tree --
-        # the software analogue of the frontend stall while buffers drain.
-        full = tree_lib.search_reference_ordered(plan.full_tree, queries)
-        return where_ordered(dplan.overflow, full, res)
-
-    res = jax.lax.cond(jnp.any(dplan.overflow), retry, lambda r: r, res)
-    if delta is None:
-        return res
-    return delta_lib.merge_ordered(res, *delta_lib.resolve(delta, queries))
 
 
 def execute_plan(
@@ -488,8 +522,7 @@ def execute_plan(
 
     Same phase chain as ``execute_plan_ordered`` but none of the ordered
     tracking -- the hot lookup path pays nothing for the §6 datapath.
-    ``delta`` composes exactly as in the ordered driver: in-kernel for
-    hrz/dup, at this driver level for hyb (DESIGN.md §7).
+    ``delta`` rides the descent call for every strategy (DESIGN.md §7/§8).
     """
     B = queries.shape[0]
     d_ops = None if delta is None else delta_lib.operands(delta)
@@ -521,41 +554,17 @@ def execute_plan(
         )
         return val.reshape(-1)[:B], found.reshape(-1)[:B]
 
-    # hyb: route -> dispatch -> descend -> combine (+ stall round).
-    dest, reg_val, reg_found = route_phase(
-        plan.reg_keys, plan.reg_values, queries, plan.split_level
-    )
-    active = ~reg_found
-    capacity = int(math.ceil(B / plan.n_trees * plan.buffer_slack))
-    dplan = dispatch_phase(plan.mapping, dest, plan.n_trees, capacity, active=active)
-    per_sub_q, per_sub_active = gather_phase(queries, dplan)
-    sub_vals, sub_found = descend_phase(
-        plan.forest_keys,
-        plan.forest_values,
-        plan.forest_height,
-        per_sub_q,
-        per_sub_active,
+    # hyb: route + dispatch + descent + stall replay + delta merge, all
+    # inside the one forest call's 2-output configuration (DESIGN.md §8).
+    val, found = _hybrid_descend(
+        plan,
+        queries,
+        ordered=False,
         use_kernel=use_kernel,
         interpret=interpret,
+        delta=d_ops,
     )
-    val, found = combine_phase(sub_vals, sub_found, dplan, B, reg_val, reg_found)
-
-    def retry(args):
-        # Stall round: the overflowed minority re-descends the whole tree --
-        # the software analogue of the frontend stall while buffers drain.
-        val, found = args
-        r_val, r_found = tree_lib.search_reference(plan.full_tree, queries)
-        val = jnp.where(dplan.overflow, r_val, val)
-        found = jnp.where(dplan.overflow, r_found, found)
-        return val, found
-
-    val, found = jax.lax.cond(
-        jnp.any(dplan.overflow), retry, lambda a: a, (val, found)
-    )
-    if delta is None:
-        return val, found
-    hit, dead, d_val, _ = delta_lib.resolve(delta, queries)
-    return delta_lib.merge_lookup(val, found, hit, dead, d_val)
+    return val, found
 
 
 def ordered_query(

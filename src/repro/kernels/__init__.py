@@ -1,8 +1,13 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
   bst_search       -- the paper's search pipeline: forest-batched descent
-                      over one flat level-major tree operand (DESIGN.md §2)
-  queue_dispatch   -- the paper's queue-mapped buffers (prefix-sum compaction)
+                      over one flat level-major tree operand (DESIGN.md §2);
+                      the hybrid configuration runs route + queue/direct
+                      dispatch + stall-round replay in the same body (§8)
+  queue_dispatch   -- the paper's queue-mapped buffers as a standalone
+                      kernel (prefix-sum compaction; used by the MoE
+                      dispatch benchmarks -- the BST hybrid path now
+                      dispatches inside the forest kernel itself)
   flash_attention  -- LM substrate hot-spot (32k prefill cells)
 
 Each has a pure-jnp oracle in ref.py and a jitted wrapper in ops.py.

@@ -80,6 +80,44 @@ def _descend_one_level(q, state, active, keys, vals, left_size, ordered):
     return (idx, val, found, pk, pv, sk, sv, rank)
 
 
+def _dispatch_lanes(dest, live, mapping: str, n_sub: int, capacity: int):
+    """In-kernel buffer placement (paper §II.C.3): which lanes land in their
+    subtree's dispatch buffer this chunk, and which overflow to the stall
+    round.  ``mapping == 'queue'`` labels same-destination lanes 0,1,2,...
+    by an exclusive prefix count (the paper's labeling network as a VPU
+    cumsum); ``'direct'`` pins lane ``i`` to slot ``i % capacity`` and
+    overflows on (dest, slot) collisions.  Pure lane arithmetic -- the
+    buffers are never materialized because the lanes never move: a placed
+    lane simply continues its descent inside its subtree's BRAM slice.
+    """
+    B = dest.shape[0]
+    live_i = live[:, None].astype(jnp.int32)
+    if mapping == "queue":
+        cols = jax.lax.broadcasted_iota(jnp.int32, (1, n_sub), 1)
+        onehot = (dest[:, None] == cols).astype(jnp.int32) * live_i
+        label = jnp.cumsum(onehot, axis=0) - onehot  # exclusive prefix count
+        label = jnp.sum(label * onehot, axis=1)  # pick own column
+        placed = live & (label < capacity)
+    elif mapping == "direct":
+        # Lane i may only use slot i % capacity of its destination buffer,
+        # so it clashes exactly when an earlier live lane k*capacity
+        # positions back shares its destination (same slot by
+        # construction) -- ceil(B/capacity) - 1 shifted compares instead
+        # of a (B, n_sub*capacity) collision matrix.
+        clash = jnp.zeros_like(live)
+        for k in range(1, -(-B // capacity)):
+            off = k * capacity
+            prev_live = jnp.concatenate([jnp.zeros((off,), bool), live[:-off]])
+            prev_dest = jnp.concatenate(
+                [jnp.full((off,), -1, jnp.int32), dest[:-off]]
+            )
+            clash = clash | (live & prev_live & (prev_dest == dest))
+        placed = live & ~clash
+    else:
+        raise ValueError(f"unknown mapping {mapping!r} (want 'direct' or 'queue')")
+    return placed, live & ~placed
+
+
 def _forest_search_kernel(
     reg_k_ref,
     reg_v_ref,
@@ -92,12 +130,17 @@ def _forest_search_kernel(
     height: int,
     ordered: bool,
     with_delta: bool,
+    dispatch: Optional[Tuple[str, int]] = None,
 ):
-    """ONE kernel body for both configurations of the datapath: membership
-    (2 output refs) and ordered (7 output refs, DESIGN.md §6).  With
-    ``with_delta`` (a Python flag, like ``ordered``) four extra operand
-    refs precede the outputs: the sorted delta buffer of pending
-    upserts/tombstones (DESIGN.md §7), resolved in the same pass."""
+    """ONE kernel body for every configuration of the datapath: membership
+    (2 output refs), ordered (7 output refs, DESIGN.md §6) and -- with
+    ``dispatch`` (a static ``(mapping, capacity)`` pair, DESIGN.md §8) --
+    the full hybrid pipeline: register-layer route, queue/direct dispatch
+    into per-subtree lanes, vertical-subtree descent and the overflow-lane
+    stall-round replay, all in this body.  With ``with_delta`` (a Python
+    flag, like ``ordered``) four extra operand refs precede the outputs:
+    the sorted delta buffer of pending upserts/tombstones (DESIGN.md §7),
+    resolved in the same pass."""
     if with_delta:
         dk_ref, dv_ref, dt_ref, dw_ref = rest_refs[:4]
         out_refs = rest_refs[4:]
@@ -117,7 +160,8 @@ def _forest_search_kernel(
     )
 
     # --- register layer: levels [0, r) live in one small broadcast block
-    # (global BFS index == offset inside the register block there).
+    # (global BFS index == offset inside the register block there).  In the
+    # hybrid configuration r == split_level, so this loop IS the route.
     reg_k = reg_k_ref[0, :]
     reg_v = reg_v_ref[0, :]
     for l in range(register_levels):
@@ -125,12 +169,56 @@ def _forest_search_kernel(
             q, state, active, reg_k, reg_v, (1 << (height - l)) - 1, ordered
         )
 
-    # --- deep levels: gathers into the flat level-major tree ("BRAM") block.
     flat_k = flat_k_ref[0, :]
     flat_v = flat_v_ref[0, :]
-    for l in range(register_levels, height + 1):
-        state = _descend_one_level(
-            q, state, active, flat_k, flat_v, (1 << (height - l)) - 1, ordered
+    if dispatch is None:
+        # --- deep levels: gathers into the flat level-major ("BRAM") block.
+        for l in range(register_levels, height + 1):
+            state = _descend_one_level(
+                q, state, active, flat_k, flat_v, (1 << (height - l)) - 1, ordered
+            )
+    else:
+        # --- hybrid pipeline (DESIGN.md §8).  A live lane's BFS index now
+        # sits at the split level; its offset there names its vertical
+        # subtree (the register layer routed it).  Dispatch decides which
+        # lanes the per-subtree buffers admit this chunk; placed lanes
+        # descend their subtree's BRAM slice, overflow lanes sit out the
+        # subtree pass and REPLAY the same levels afterwards -- the
+        # in-kernel stall round (the buffers have drained by then, so the
+        # replay admits everything).  Both passes start from the same
+        # register-layer state: it is a valid prefix of every lane's
+        # root-to-leaf path, which is what makes the replay exact.
+        mapping, capacity = dispatch
+        n_sub = 1 << register_levels
+        live = active & ~state[2]
+        dest = jnp.clip(state[0] - ((1 << register_levels) - 1), 0, n_sub - 1)
+        placed, overflow = _dispatch_lanes(dest, live, mapping, n_sub, capacity)
+        sub_state = state
+        for l in range(register_levels, height + 1):
+            sub_state = _descend_one_level(
+                q,
+                sub_state,
+                active & ~overflow,
+                flat_k,
+                flat_v,
+                (1 << (height - l)) - 1,
+                ordered,
+            )
+
+        def replay(st):
+            # The stall round re-runs the subtree levels for the deferred
+            # lanes only -- the hardware's "frontend stalls while buffers
+            # drain", paid only when a buffer actually overflowed (the
+            # cond is the cycle cost of a stall, in kernel form).
+            for l in range(register_levels, height + 1):
+                st = _descend_one_level(
+                    q, st, overflow, flat_k, flat_v, (1 << (height - l)) - 1, ordered
+                )
+            return st
+
+        rep_state = jax.lax.cond(jnp.any(overflow), replay, lambda st: st, state)
+        state = tuple(
+            jnp.where(overflow, r, s) for r, s in zip(rep_state, sub_state)
         )
 
     _, val, found, pk, pv, sk, sv, rank = state
@@ -174,6 +262,7 @@ def bst_ordered_forest_pallas(
     shared_tree: bool = False,
     ordered: bool = True,
     delta: Optional[Tuple[jax.Array, ...]] = None,
+    dispatch: Optional[Tuple[str, int]] = None,
 ) -> Tuple[jax.Array, ...]:
     """Ordered search over a forest of BFS-layout trees in ONE ``pallas_call``.
 
@@ -187,6 +276,13 @@ def bst_ordered_forest_pallas(
     signed rank weights -- shared by every grid cell like the register
     block.  Each lane then resolves ``delta-hit > tombstone > tree-hit``
     and corrects its rank to the merged key set, still in the same pass.
+
+    ``dispatch`` selects the hybrid configuration (DESIGN.md §8): a static
+    ``(mapping, capacity)`` pair that turns the register loop into the
+    route (``register_levels`` then IS the split level, and may be 0),
+    places the surviving lanes into per-subtree dispatch buffers
+    (queue/direct, paper §II.C.3) and replays overflow lanes through the
+    deep levels after the subtree pass -- the in-kernel stall round.
 
     Returns per-lane (n_trees, B) arrays
     ``(values, found, pred_keys, pred_values, succ_keys, succ_values, rank)``
@@ -203,7 +299,10 @@ def bst_ordered_forest_pallas(
         raise ValueError(f"flat operand has {n} nodes, want 2^{height + 1}-1")
     if not shared_tree and forest_keys.shape[0] != T:
         raise ValueError("need one tree row per query row (or shared_tree=True)")
-    register_levels = max(1, min(register_levels, height + 1))
+    if dispatch is None:
+        register_levels = max(1, min(register_levels, height + 1))
+    elif not 0 <= register_levels <= height:
+        raise ValueError("hybrid split level must lie in [0, height]")
     if active is None:
         active = jnp.ones((T, B), bool)
     pad = (-B) % block_q
@@ -211,7 +310,7 @@ def bst_ordered_forest_pallas(
     ap = jnp.pad(active.astype(jnp.int32), ((0, 0), (0, pad)))
     nq = qp.shape[1] // block_q
 
-    reg_n = (1 << register_levels) - 1
+    reg_n = max((1 << register_levels) - 1, 1)
     if shared_tree:
         tree_map = lambda t, i: (0, 0)  # noqa: E731 -- every grid row reads row 0
     else:
@@ -224,6 +323,7 @@ def bst_ordered_forest_pallas(
         height=height,
         ordered=ordered,
         with_delta=delta is not None,
+        dispatch=dispatch,
     )
     in_specs = [
         pl.BlockSpec((1, reg_n), tree_map),
@@ -297,6 +397,51 @@ def bst_search_forest_pallas(
         delta=delta,
     )
     return out[0], out[1]
+
+
+def bst_hybrid_forest_pallas(
+    tree_keys: jax.Array,
+    tree_values: jax.Array,
+    queries: jax.Array,
+    height: int,
+    split_level: int,
+    mapping: str = "queue",
+    capacity: int = 1,
+    active: Optional[jax.Array] = None,
+    block_q: int = 512,
+    interpret: bool = True,
+    ordered: bool = True,
+    delta: Optional[Tuple[jax.Array, ...]] = None,
+) -> Tuple[jax.Array, ...]:
+    """The WHOLE hybrid pipeline in ONE ``pallas_call`` (DESIGN.md §8).
+
+    tree_keys/tree_values: the (n,) flat level-major FULL tree -- the top
+    ``split_level`` levels double as the register layer (one small VMEM
+    block) and each vertical subtree is a BRAM slice of the same operand.
+    Per ``block_q`` chunk the kernel routes through the register layer,
+    places survivors into per-subtree dispatch buffers (``mapping`` x
+    ``capacity``, paper §II.C.3), descends placed lanes through their
+    subtree, replays overflow lanes through the same levels (the stall
+    round) and resolves the ``delta`` write buffer -- no driver-level
+    composition left.  Returns (B,) arrays: the 7-field ordered contract,
+    or (values, found) with ``ordered=False``.
+    """
+    if queries.ndim != 1 or tree_keys.ndim != 1:
+        raise ValueError("hybrid operands are single-tree: 1-D arrays")
+    out = bst_ordered_forest_pallas(
+        tree_keys[None, :],
+        tree_values[None, :],
+        queries[None, :],
+        height,
+        active=None if active is None else active[None, :],
+        register_levels=split_level,
+        block_q=block_q,
+        interpret=interpret,
+        ordered=ordered,
+        delta=delta,
+        dispatch=(mapping, capacity),
+    )
+    return tuple(o[0] for o in out)
 
 
 def bst_search_pallas(

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.bst_search import (
+    bst_hybrid_forest_pallas,
     bst_ordered_forest_pallas,
     bst_search_forest_pallas,
     bst_search_pallas,
@@ -65,16 +66,15 @@ def bst_search_forest(
             fv = jnp.broadcast_to(fv, (T,) + fv.shape[1:])
         if active is None:
             active = jnp.ones(queries.shape, bool)
-        val, found = jax.vmap(
+        out = jax.vmap(
             lambda k, v, q, a: ref.bst_search_ref(k, v, q, height, a)
         )(fk, fv, queries, active)
         if delta is not None:
-            hit, dead, d_val, _ = ref.bst_delta_resolve_ref(
+            hit, dead, d_val, wb = ref.bst_delta_resolve_ref(
                 *delta, queries, active
             )
-            val = jnp.where(hit, jnp.where(dead, ref.SENTINEL_VALUE, d_val), val)
-            found = jnp.where(hit, ~dead, found)
-        return val, found
+            out = ref.merge_delta_resolution(out, hit, dead, d_val, wb)
+        return out
     return bst_search_forest_pallas(
         forest_keys,
         forest_values,
@@ -140,9 +140,7 @@ def bst_ordered_forest(
             hit, dead, d_val, wb = ref.bst_delta_resolve_ref(
                 *delta, queries, active
             )
-            val = jnp.where(hit, jnp.where(dead, ref.SENTINEL_VALUE, d_val), out[0])
-            found = jnp.where(hit, ~dead, out[1])
-            out = (val, found) + out[2:6] + (out[6] + wb,)
+            out = ref.merge_delta_resolution(out, hit, dead, d_val, wb)
         return out
     return bst_ordered_forest_pallas(
         forest_keys,
@@ -154,6 +152,82 @@ def bst_ordered_forest(
         block_q=block_q,
         interpret=interpret,
         shared_tree=shared_tree,
+        delta=delta,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "height",
+        "split_level",
+        "mapping",
+        "capacity",
+        "block_q",
+        "interpret",
+        "ordered",
+        "use_ref",
+    ),
+)
+def bst_hybrid_forest(
+    tree_keys: jax.Array,
+    tree_values: jax.Array,
+    queries: jax.Array,
+    height: int,
+    split_level: int,
+    mapping: str = "queue",
+    capacity: int = 1,
+    active: Optional[jax.Array] = None,
+    block_q: int = 512,
+    interpret: bool = True,
+    ordered: bool = True,
+    use_ref: bool = False,
+    delta: Optional[Tuple[jax.Array, ...]] = None,
+) -> Tuple[jax.Array, ...]:
+    """The hybrid strategy's single entry point (DESIGN.md §8): register
+    route, queue/direct dispatch, vertical-subtree descent, stall-round
+    replay and the delta-buffer merge, all in ONE ``pallas_call`` -- or the
+    structurally matching jnp oracle with ``use_ref=True``.  Operands are
+    the (n,) flat FULL tree and a (B,) query batch; outputs are (B,) in the
+    §6 ordered contract (``(values, found)`` with ``ordered=False``).
+
+    ``capacity`` is the per-subtree dispatch-buffer depth per chunk: the
+    kernel dispatches each ``block_q`` chunk independently (the FPGA
+    streams chunks), the oracle treats the whole batch as one chunk (the
+    retired driver's granularity) -- results are identical either way,
+    which is exactly the stall round's contract.  ``delta`` rides the
+    write buffer on both paths; value/found/rank come back merged.
+    """
+    if use_ref:
+        out = ref.bst_hybrid_ref(
+            tree_keys,
+            tree_values,
+            queries,
+            height,
+            split_level,
+            mapping,
+            capacity,
+            active=active,
+            ordered=ordered,
+        )
+        if delta is not None:
+            hit, dead, d_val, wb = ref.bst_delta_resolve_ref(
+                *delta, queries, active
+            )
+            out = ref.merge_delta_resolution(out, hit, dead, d_val, wb)
+        return out
+    return bst_hybrid_forest_pallas(
+        tree_keys,
+        tree_values,
+        queries,
+        height,
+        split_level,
+        mapping=mapping,
+        capacity=capacity,
+        active=active,
+        block_q=block_q,
+        interpret=interpret,
+        ordered=ordered,
         delta=delta,
     )
 

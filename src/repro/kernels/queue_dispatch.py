@@ -12,6 +12,13 @@ to it (models/moe.py).
 
 Single grid step per chunk: the chunk, label matrix and buffer image all fit
 comfortably in VMEM for the paper's chunk sizes (<= a few thousand lanes).
+
+Since DESIGN.md §8 the BST hybrid strategy no longer calls this kernel:
+its dispatch executes INSIDE the forest search kernel
+(``bst_search._dispatch_lanes``, the same labeling arithmetic without a
+materialized buffer image, because the lanes never move).  This standalone
+kernel remains the buffer-image primitive for workloads that do move
+items -- the MoE dispatch benchmarks and the buffer-semantics tests.
 """
 
 from __future__ import annotations

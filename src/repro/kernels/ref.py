@@ -105,6 +105,128 @@ def bst_search_ref(
     return val, found & active
 
 
+def bst_hybrid_ref(
+    tree_keys: jax.Array,
+    tree_values: jax.Array,
+    queries: jax.Array,
+    height: int,
+    split_level: int,
+    mapping: str,
+    capacity: int,
+    active: Optional[jax.Array] = None,
+    ordered: bool = True,
+) -> Tuple[jax.Array, ...]:
+    """Oracle for the in-kernel hybrid pipeline (DESIGN.md §8).
+
+    Mirrors the kernel's phase structure over the (n,) flat FULL tree: a
+    register-layer route over levels [0, split_level), queue-/direct-mapped
+    dispatch of the surviving lanes into per-subtree buffers of depth
+    ``capacity`` (paper §II.C.3), a subtree descent gated to the placed
+    lanes, and a stall-round replay of the same levels for the overflow
+    lanes -- both continuing from the shared register-layer state, which is
+    a valid prefix of every root-to-leaf path (that is what makes the
+    replay exact).  Returns the 7-field ordered tuple, or (values, found)
+    with ``ordered=False``.  Ground truth for ``bst_hybrid_forest_pallas``;
+    the composition is bit-identical to a plain full-tree descent, which
+    the property tests assert independently.
+    """
+    n = tree_keys.shape[0]
+    B = queries.shape[0]
+    if active is None:
+        active = jnp.ones((B,), dtype=bool)
+    n_sub = 1 << split_level
+    levels = jnp.arange(height + 1)
+    left_sizes = ((1 << (height - levels)) - 1).astype(jnp.int32)
+
+    def segment(state, lefts, gate):
+        """Masked compare-descend over one contiguous level range."""
+
+        def step(carry, left):
+            idx, val, found, pk, pv, sk, sv, rank = carry
+            nk = tree_keys[idx]
+            nv = tree_values[idx]
+            live = gate & ~found
+            hit = (nk == queries) & live
+            go_right = live & ~hit & (queries > nk)
+            val = jnp.where(hit, nv, val)
+            found = found | hit
+            if ordered:
+                go_left = live & ~hit & (queries < nk)
+                pk = jnp.where(go_right, nk, pk)
+                pv = jnp.where(go_right, nv, pv)
+                sk = jnp.where(go_left, nk, sk)
+                sv = jnp.where(go_left, nv, sv)
+                rank = (
+                    rank
+                    + jnp.where(go_right, left + 1, 0)
+                    + jnp.where(hit, left, 0)
+                )
+            nxt = jnp.minimum(2 * idx + 1 + go_right.astype(idx.dtype), n - 1)
+            idx = jnp.where(found | ~gate, idx, nxt)
+            return (idx, val, found, pk, pv, sk, sv, rank), None
+
+        return jax.lax.scan(step, state, lefts)[0]
+
+    state = (
+        jnp.zeros((B,), jnp.int32),
+        jnp.full((B,), SENTINEL_VALUE, jnp.int32),
+        jnp.zeros((B,), bool),
+        jnp.full((B,), NO_PRED_KEY, jnp.int32),
+        jnp.full((B,), SENTINEL_VALUE, jnp.int32),
+        jnp.full((B,), NO_SUCC_KEY, jnp.int32),
+        jnp.full((B,), SENTINEL_VALUE, jnp.int32),
+        jnp.zeros((B,), jnp.int32),
+    )
+    # --- route: the register layer is the top of the same flat operand.
+    state = segment(state, left_sizes[:split_level], active)
+    idx, found = state[0], state[2]
+    live = active & ~found
+    dest = jnp.where(live, jnp.clip(idx - (n_sub - 1), 0, n_sub - 1), -1)
+
+    # --- dispatch: per-subtree buffer placement (paper §II.C.3).
+    if mapping == "queue":
+        onehot = jax.nn.one_hot(dest, n_sub, dtype=jnp.int32)
+        label = jnp.cumsum(onehot, axis=0) - onehot
+        label = jnp.take_along_axis(
+            label, jnp.clip(dest, 0, n_sub - 1)[:, None], axis=1
+        )[:, 0]
+        placed = live & (label < capacity)
+    elif mapping == "direct":
+        # Same shifted-compare clash test as the kernel: lane i's only
+        # possible slot conflicts sit k*capacity positions earlier with
+        # the same destination, so no (B, n_sub*capacity) collision
+        # matrix is ever materialized (capacity here scales with the
+        # whole batch -- the retired driver's O(B^2) one-hot was exactly
+        # why the direct-mapped ref engines crawled on CPU).
+        clash = jnp.zeros_like(live)
+        for k in range(1, -(-B // capacity)):
+            off = k * capacity
+            prev_live = jnp.concatenate([jnp.zeros((off,), bool), live[:-off]])
+            prev_dest = jnp.concatenate(
+                [jnp.full((off,), -1, jnp.int32), dest[:-off]]
+            )
+            clash = clash | (live & prev_live & (prev_dest == dest))
+        placed = live & ~clash
+    else:
+        raise ValueError(f"unknown mapping {mapping!r} (want 'direct' or 'queue')")
+    overflow = live & ~placed
+
+    # --- subtree descent (placed lanes) + stall-round replay (overflow,
+    # paid only when a buffer actually overflowed -- the stall's cost).
+    sub = segment(state, left_sizes[split_level:], active & ~overflow)
+    rep = jax.lax.cond(
+        jnp.any(overflow),
+        lambda st: segment(st, left_sizes[split_level:], overflow),
+        lambda st: st,
+        state,
+    )
+    state = tuple(jnp.where(overflow, r, s) for r, s in zip(rep, sub))
+    _, val, found, pk, pv, sk, sv, rank = state
+    if not ordered:
+        return val, found & active
+    return val, found & active, pk, pv, sk, sv, rank
+
+
 def bst_delta_resolve_ref(
     delta_keys: jax.Array,
     delta_values: jax.Array,
@@ -134,6 +256,30 @@ def bst_delta_resolve_ref(
         hit = hit & active
         wbelow = jnp.where(active, wbelow, 0)
     return hit, dead, value.astype(jnp.int32), wbelow.astype(jnp.int32)
+
+
+def merge_delta_resolution(
+    out: Tuple[jax.Array, ...],
+    hit: jax.Array,
+    dead: jax.Array,
+    value: jax.Array,
+    weight_below: jax.Array,
+) -> Tuple[jax.Array, ...]:
+    """Fold a ``bst_delta_resolve_ref`` resolution into descent outputs.
+
+    ``delta-hit > tombstone > tree-hit`` on value/found, plus the merged
+    rank correction when ``out`` is the 7-field ordered tuple (a 2-field
+    membership tuple gets no rank lane to correct).  The ONE driver-side
+    implementation of the merge every ``ops.py`` use_ref branch shares --
+    the same math the kernel body applies in-``pallas_call`` and
+    ``core/delta.merge_lookup``/``merge_ordered`` apply to the
+    distributed engine's ``OrderedResult``.
+    """
+    val = jnp.where(hit, jnp.where(dead, SENTINEL_VALUE, value), out[0])
+    found = jnp.where(hit, ~dead, out[1])
+    if len(out) == 2:
+        return val, found
+    return (val, found) + out[2:6] + (out[6] + weight_below,)
 
 
 def queue_dispatch_ref(

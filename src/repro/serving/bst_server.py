@@ -33,7 +33,12 @@ atomically between chunks.  This module is that loop, TPU-native:
     the swap but not yet drained see the new state (drain-before-swap if
     read-your-epoch consistency is required);
   * **keys/sec accounting** -- per-chunk timing with ``block_until_ready``,
-    found counts accumulated per chunk (not just the final one).
+    found counts accumulated per chunk (not just the final one).  Busy
+    seconds are attributed per op by the engine lanes each request
+    actually occupied (one per point/write/delete key, two per range
+    request -- the lo||hi concatenated descent), so mixed spans cannot
+    skew one op's ``keys_per_sec`` with another op's time;
+    ``lanes_per_sec`` is the figure comparable across op mixes.
 """
 
 from __future__ import annotations
@@ -66,10 +71,21 @@ class OpStats:
     served: int = 0  # keys (point ops) / ranges (range ops) answered
     chunks: int = 0  # engine invocations
     busy_s: float = 0.0  # time inside the engine (incl. padding lanes)
+    # Engine lanes the op's requests actually occupied (padding excluded):
+    # one per key for point/write/delete ops, TWO per range request -- the
+    # lo and hi bounds both descend (the lo||hi concatenated pass,
+    # DESIGN.md §6).  Busy seconds in shared spans are attributed by this
+    # number, and lanes_per_sec is the throughput figure comparable across
+    # op mixes (keys_per_sec counts range requests as one unit each).
+    lanes: int = 0
 
     @property
     def keys_per_sec(self) -> float:
         return self.served / self.busy_s if self.busy_s > 0 else 0.0
+
+    @property
+    def lanes_per_sec(self) -> float:
+        return self.lanes / self.busy_s if self.busy_s > 0 else 0.0
 
 
 @dataclasses.dataclass
@@ -82,6 +98,7 @@ class ServerStats:
     found: int = 0  # lookup hits, accumulated per chunk
     chunks: int = 0  # engine invocations
     busy_s: float = 0.0  # time inside the engine (incl. padding lanes)
+    lanes: int = 0  # engine lanes occupied (see OpStats.lanes)
     snapshot_swaps: int = 0  # full-rebuild swaps (the non-delta path)
     updates: int = 0  # write/delete ops absorbed by the delta buffer
     compactions: int = 0  # delta-buffer merges into fresh snapshots
@@ -90,6 +107,10 @@ class ServerStats:
     @property
     def keys_per_sec(self) -> float:
         return self.served / self.busy_s if self.busy_s > 0 else 0.0
+
+    @property
+    def lanes_per_sec(self) -> float:
+        return self.lanes / self.busy_s if self.busy_s > 0 else 0.0
 
     def op(self, name: str) -> OpStats:
         return self.per_op.setdefault(name, OpStats())
@@ -392,10 +413,17 @@ class BSTServer:
         self.stats.compactions += swept
         if swept and self._warm_ops:
             self.warmup(self._warm_ops)
+        self.stats.lanes += n
         for r in reqs:
             op_stats = self.stats.op(r.op)
             op_stats.served += r.a.size
+            # Busy attribution is by the lanes the request actually
+            # occupied in the span's engine calls (one per write/delete
+            # key; ``n`` counts every occupied lane in the span, so shares
+            # sum to exactly ``dt`` and padding cost is borne
+            # proportionally -- a request's op kind never skews it).
             op_stats.busy_s += dt * (r.a.size / max(n, 1))
+            op_stats.lanes += r.a.size
             out[r.ticket] = (np.asarray(r.a.size, np.int32),)
         for kind in {r.op for r in reqs}:
             # a mixed span's engine calls served both kinds; each kind
@@ -439,11 +467,17 @@ class BSTServer:
                 res = (res,)
             jax.block_until_ready(res)
             dt = time.perf_counter() - t0
+            real = min(self.chunk_size, B - lo)  # non-padded lanes this chunk
+            # range requests occupy TWO engine lanes each: the lo||hi
+            # concatenated descent (DESIGN.md §6)
+            lanes = real * (2 if op in RANGE_OPS else 1)
             self.stats.busy_s += dt
             self.stats.chunks += 1
+            self.stats.lanes += lanes
             ops = self.stats.op(op)
             ops.busy_s += dt
             ops.chunks += 1
+            ops.lanes += lanes
             if columns is None:
                 columns = [
                     np.empty((a.size,) + np.asarray(c).shape[1:], np.asarray(c).dtype)
@@ -452,8 +486,7 @@ class BSTServer:
             for col, c in zip(columns, res):
                 col[sl] = np.asarray(c)
             if op == "lookup":
-                # hits accumulated per chunk, padded lanes excluded below
-                real = min(self.chunk_size, B - lo)
+                # hits accumulated per chunk, padded lanes excluded
                 self.stats.found += int(np.asarray(res[1])[:real].sum())
         self.stats.served += B
         self.stats.op(op).served += B

@@ -149,6 +149,74 @@ def test_high_water_triggers_compaction():
     np.testing.assert_array_equal(np.asarray(v), big * 2)
 
 
+CAP = 8
+
+
+@pytest.mark.parametrize("batch", [CAP, CAP + 1, 3 * CAP])
+def test_apply_ops_batch_vs_capacity_edges(batch):
+    """Oversized batches chunk through interleaved compactions; occupancy
+    never exceeds the capacity between triggers, and no entry is silently
+    dropped -- checked against a dict oracle.  Covers batch == cap (the
+    exact-fit edge), cap + 1 (one lane past it) and 3 * cap (multiple
+    interleaved compactions), each on a buffer pre-filled above zero."""
+    keys, values = make_tree_data(120, seed=6)
+    # high_water == capacity: compaction happens only when it MUST, so the
+    # exact-fit edge genuinely fills the buffer before the next trigger.
+    cfg = EngineConfig(strategy="hrz", delta_capacity=CAP, delta_high_water=CAP)
+    eng = BSTEngine(keys, values, cfg)
+    kv = dict(zip(keys.tolist(), values.tolist()))
+
+    eng.apply_ops([1001, 1003, 1005], [1, 3, 5], [False] * 3)
+    kv.update({1001: 1, 1003: 3, 1005: 5})
+    assert eng.pending_writes() == 3
+
+    rng = np.random.default_rng(batch)
+    bk = rng.choice(np.arange(1000, 1000 + 2 * batch), batch, replace=False)
+    bv = rng.integers(0, 10**6, batch).astype(np.int32)
+    bd = rng.integers(0, 4, batch) == 0  # ~25% tombstones
+    eng.apply_ops(bk.astype(np.int32), bv, bd)
+    assert eng.pending_writes() <= CAP
+    if batch > CAP:
+        assert eng.compactions >= batch // CAP
+    for k, v, d in zip(bk.tolist(), bv.tolist(), bd.tolist()):
+        if d:
+            kv.pop(k, None)
+        else:
+            kv[k] = v
+
+    probes = np.concatenate([bk, [1001, 1003, 1005]]).astype(np.int32)
+    got_v, got_f = eng.lookup(probes)
+    for q, v, f in zip(probes.tolist(), np.asarray(got_v), np.asarray(got_f)):
+        assert bool(f) == (q in kv), q
+        if q in kv:
+            assert int(v) == kv[q], q
+    # and once more after absorbing everything into a fresh snapshot
+    eng.compact()
+    got_v, got_f = eng.lookup(probes)
+    for q, v, f in zip(probes.tolist(), np.asarray(got_v), np.asarray(got_f)):
+        assert bool(f) == (q in kv) and (q not in kv or int(v) == kv[q]), q
+
+
+def test_delta_capacity_config_validation():
+    """Capacity 0 -> clear 'write path disabled' error on apply_ops;
+    negative capacity and an unreachable high-water mark fail at config
+    construction (they could silently overflow the buffer otherwise)."""
+    keys, values = make_tree_data(50, seed=3)
+    eng = BSTEngine(keys, values, EngineConfig(strategy="hrz", delta_capacity=0))
+    with pytest.raises(ValueError, match="delta_capacity == 0"):
+        eng.apply_ops([1], [1], [False])
+    with pytest.raises(ValueError, match="delta_capacity must be >= 0"):
+        EngineConfig(strategy="hrz", delta_capacity=-4)
+    with pytest.raises(ValueError, match="delta_high_water"):
+        EngineConfig(strategy="hrz", delta_capacity=8, delta_high_water=9)
+    with pytest.raises(ValueError, match="delta_high_water"):
+        EngineConfig(strategy="hrz", delta_capacity=8, delta_high_water=0)
+    with pytest.raises(ValueError, match="valid mask"):
+        BSTEngine(
+            keys, values, EngineConfig(strategy="hrz", delta_capacity=4)
+        ).apply_ops([1, 2], [1, 2], [False, False], valid=[True])
+
+
 def test_read_only_engine_rejects_apply_ops():
     keys, values = make_tree_data(50, seed=3)
     eng = BSTEngine(keys, values, EngineConfig(strategy="hrz"))

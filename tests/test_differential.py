@@ -260,6 +260,91 @@ def test_engine_differential_kernel_hyb_post_compaction():
     probe_all_ops("khyb4q/post", eng, kv, rng)
 
 
+# ------------------------------------------------- adversarial hyb skew
+def _assert_all_ops_match(tag, eng, kv, q, spans):
+    """Every read op over the full batch, each lane against the module's
+    one dict+sorted oracle (``oracle_answer`` via ``check_read``)."""
+    for op in READ_OPS:
+        if op in ("range_count", "range_scan"):
+            got = eng.query(op, q, q + spans, k=SCAN_K)
+        else:
+            got = eng.query(op, q)
+        cols = got if isinstance(got, tuple) else (got,)
+        arrs = [np.asarray(c) for c in cols]
+        for i in range(q.size):
+            lane = tuple(a[i] for a in arrs)
+            check_read(
+                f"{tag}", kv, op, int(q[i]), int(spans[i]),
+                lane if len(lane) > 1 else lane[0],
+            )
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=2, deadline=None)
+def test_hyb_adversarial_skew_replay(seed):
+    """Worst-case hybrid skew: every query routes to vertical subtree 0,
+    overflowing the per-subtree dispatch buffers so most lanes resolve
+    through the stall-round replay (in-kernel on the Pallas path,
+    DESIGN.md §8).  Both mappings and both paths must stay bit-identical
+    to the dict+sorted oracle, with a live delta buffer, pre- and
+    post-compaction."""
+    from repro.core import plans as plans_lib
+    from repro.core import tree as tree_lib
+
+    rng = np.random.default_rng(seed % 2**32)
+    keys, values = make_tree_data(150, seed=13, spacing=3)
+    engines = {
+        f"{mapping}/kernel={uk}": BSTEngine(
+            keys,
+            values,
+            EngineConfig(
+                strategy="hyb", n_trees=4, mapping=mapping, use_kernel=uk,
+                delta_capacity=32, delta_high_water=28,
+            ),
+        )
+        for mapping, uk in (
+            ("queue", False),
+            ("queue", True),
+            ("direct", False),
+            ("direct", True),
+        )
+    }
+    kv = dict(zip(keys.tolist(), values.tolist()))
+
+    any_eng = next(iter(engines.values()))
+    # every key strictly below the root's left child routes left-left:
+    # vertical subtree 0 (split_level 2 -> the register layer is the top
+    # two levels of the flat operand)
+    bound = int(np.asarray(any_eng.tree.keys)[1])
+    B = 600
+    q = rng.integers(1, bound, B).astype(np.int32)
+    dest, _, found = tree_lib.register_layer_route(any_eng.tree, q, 2)
+    assert np.all((np.asarray(dest) == 0) | np.asarray(found))
+    # the scenario must actually overflow: one subtree receives a whole
+    # chunk while its buffer holds only the slack-scaled fair share
+    plan = any_eng.plan
+    assert B > plans_lib.hyb_capacity(plan, B)  # reference-path granularity
+    assert 512 > plans_lib.hyb_capacity(plan, 512)  # kernel block_q chunks
+
+    spans = rng.integers(0, 30, B).astype(np.int32)
+    wk = rng.choice(np.arange(1, bound, dtype=np.int32), 24, replace=False)
+    wv = rng.integers(0, 10**6, 24).astype(np.int32)
+    wd = rng.integers(0, 3, 24) == 0
+    for tag, eng in engines.items():
+        eng.apply_ops(wk, wv, wd)
+    for k_, v_, d_ in zip(wk.tolist(), wv.tolist(), wd.tolist()):
+        if d_:
+            kv.pop(k_, None)
+        else:
+            kv[k_] = v_
+
+    for tag, eng in engines.items():
+        assert eng.pending_writes() > 0  # the delta buffer rides the replay
+        _assert_all_ops_match(f"{tag}/pre", eng, kv, q, spans)
+        eng.compact()
+        _assert_all_ops_match(f"{tag}/post", eng, kv, q, spans)
+
+
 # ------------------------------------------------------- server acceptance
 @pytest.mark.parametrize("name", sorted(REF_CONFIGS))
 def test_server_mixed_stream_500_ops(name):

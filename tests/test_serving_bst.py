@@ -88,6 +88,49 @@ def test_snapshot_swap_every_strategy(name, use_kernel):
         assert not hit[k]
 
 
+def test_per_op_busy_attribution_by_lanes():
+    """Busy seconds attribute by the engine lanes each request occupied:
+    range requests count their lo AND hi descent lanes, write/delete
+    requests sharing a span split its time by key count, and per-op busy
+    always sums to the span total (nothing double-booked or skewed)."""
+    keys, values = make_tree_data(500, seed=11)
+    srv = BSTServer(
+        keys,
+        values,
+        EngineConfig(strategy="hrz", delta_capacity=64),
+        chunk_size=128,
+        scan_k=4,
+    )
+    rng = np.random.default_rng(2)
+    q = rng.choice(keys, 100).astype(np.int32)
+    lo = rng.choice(keys, 60).astype(np.int32)
+    srv.submit(q)
+    srv.submit_range(lo, (lo + 10).astype(np.int32), op="range_count")
+    srv.drain()
+    s = srv.stats
+    assert s.per_op["lookup"].lanes == 100
+    assert s.per_op["range_count"].lanes == 120  # lo||hi: 2 lanes per range
+    assert s.lanes == 220
+    assert sum(o.busy_s for o in s.per_op.values()) == pytest.approx(s.busy_s)
+    assert s.per_op["range_count"].lanes_per_sec == pytest.approx(
+        120 / s.per_op["range_count"].busy_s
+    )
+
+    srv.reset_stats()
+    # a mixed write+delete span rides shared engine calls: time splits by
+    # occupied lanes (30 write keys vs 10 delete keys -> exactly 3:1)
+    srv.submit_write(
+        np.arange(2001, 2031, dtype=np.int32), np.ones(30, np.int32)
+    )
+    srv.submit_delete(np.arange(2001, 2011, dtype=np.int32))
+    srv.drain()
+    s = srv.stats
+    w, d = s.per_op["write"], s.per_op["delete"]
+    assert w.lanes == 30 and d.lanes == 10 and s.lanes == 40
+    assert w.busy_s + d.busy_s == pytest.approx(s.busy_s)
+    assert w.busy_s == pytest.approx(3 * d.busy_s)
+
+
 def test_swap_applies_to_pending_requests():
     """Requests drained after a swap see the new snapshot (documented)."""
     keys, values = make_tree_data(300, seed=9)
