@@ -18,7 +18,11 @@ measure executed semantics on CPU, not TPU performance (DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
+import os
+import subprocess
+import sys
 from typing import List
 
 import jax
@@ -44,7 +48,7 @@ def _time_op(eng: BSTEngine, op: str, q, q_hi, warmup=1, iters=3) -> float:
     )
 
 
-def run(n_keys=(1 << 16) - 1, batch=16384, kernel_batch=2048) -> List[Row]:
+def run(n_keys=(1 << 16) - 1, batch=16384, kernel_batch=2048, quick=False) -> List[Row]:
     # batch sized so the retired-driver baseline rows (hyb_kernel_vs_driver
     # below -- the one place the old O(B * n * capacity) direct dispatch
     # still runs, as the regression-gate baseline) finish in seconds;
@@ -116,6 +120,16 @@ def run(n_keys=(1 << 16) - 1, batch=16384, kernel_batch=2048) -> List[Row]:
 
     rows.extend(hyb_kernel_vs_driver_rows(keys, values, batch=kernel_batch))
     rows.extend(mixed_rw_rows(keys, values, batch=min(batch, 8192)))
+    # quick halves the chunk and trims stream/trials so CI's engine suite
+    # stays quick (the 8192-row chunks still clear the gate's 4k floor).
+    # The tree stays full-size on purpose: against a shallow tree the
+    # per-chunk fixed costs drown the descent and the comparison measures
+    # dispatch overhead, not serving.
+    rows.extend(
+        sharded_serve_rows(chunk=8192, n_chunks=6, trials=5)
+        if quick
+        else sharded_serve_rows()
+    )
     return rows
 
 
@@ -259,3 +273,150 @@ def mixed_rw_rows(keys, values, batch: int, rounds: int = 4) -> List[Row]:
                 )
             )
     return rows
+
+
+# The sharded serving comparison needs a multi-device host, and the XLA
+# device-count flag must be set before jax initializes -- so the rows are
+# measured in a subprocess (exactly like tests/test_distributed.py) and
+# returned as JSON on the last stdout line.  Device count tracks the
+# PHYSICAL core count: a host-simulated mesh wider than the cores measures
+# oversubscription, not scaling.
+_SHARDED_BENCH = r"""
+import os, sys, json, time, statistics
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(devices)d"
+sys.path.insert(0, %(src)r)
+import numpy as np
+from repro.core.engine import EngineConfig
+from repro.core import distributed as D
+from repro.data.keysets import make_tree_data
+from repro.serving import BSTServer
+
+DEV = %(devices)d
+CHUNK = %(chunk)d
+N_CHUNKS = %(n_chunks)d
+TRIALS = %(trials)d
+rng = np.random.default_rng(11)
+keys, values = make_tree_data(%(n_keys)d, seed=0)
+stream = rng.choice(keys, N_CHUNKS * CHUNK).astype(np.int32)
+rows = []
+
+def drain_stream(srv):
+    srv.submit(stream)
+    t0 = time.perf_counter()
+    srv.drain()
+    return time.perf_counter() - t0
+
+for strategy in ("dup", "hrz", "hyb"):
+    n_trees = max(2, DEV) if strategy != "hrz" else 1
+    cfg = EngineConfig(strategy=strategy, n_trees=n_trees)
+    mesh = D.make_serving_mesh(strategy)
+    servers = {
+        "single": BSTServer(keys, values, cfg, chunk_size=CHUNK),
+        "sharded": BSTServer(keys, values, cfg, chunk_size=CHUNK, mesh=mesh),
+    }
+    for srv in servers.values():
+        srv.warmup(("lookup",))
+    # Interleaved A/B trials so host noise hits both modes alike; the row
+    # records the per-mode MEDIAN drain wall (keys/sec over the stream).
+    times = {name: [] for name in servers}
+    for _ in range(TRIALS):
+        for name, srv in servers.items():
+            times[name].append(drain_stream(srv))
+    # Per-device stored nodes: the capacity axis subtree sharding buys
+    # (DESIGN.md §9) -- dup replicates (no win), hrz/hyb hold 1/M of the
+    # tree plus the replicated register layer.  MEASURED from each
+    # server's real shard layout, so a sharding regression (an operand
+    # silently replicated) trips the gate instead of a formula hiding it.
+    mem = {name: srv.memory_nodes_per_device() for name, srv in servers.items()}
+    for name in servers:
+        dt = statistics.median(times[name])
+        rows.append({
+            "name": "serve/sharded_%%s/%%s" %% (strategy, name),
+            "us_per_call": dt * 1e6,
+            "derived": ";".join([
+                "spair=%%s" %% strategy,
+                "mode=%%s" %% name,
+                "keys_per_sec=%%.3e" %% (stream.size / dt),
+                "batch=%%d" %% CHUNK,
+                "devices=%%d" %% DEV,
+                "mem_nodes_dev=%%d" %% mem[name],
+            ]),
+        })
+
+# One sharded mixed read/write row: the delta buffer riding the sharded
+# program as replicated operands, compactions included (DESIGN.md §9).
+cfg = EngineConfig(strategy="dup", n_trees=max(2, DEV), delta_capacity=2048)
+srv = BSTServer(keys, values, cfg, chunk_size=CHUNK, mesh=D.make_serving_mesh("dup"))
+srv.warmup(("lookup",))
+srv.submit_write(np.int32(1), np.int32(1))
+srv.drain()
+srv.reset_stats()
+n_w = CHUNK // 10
+t0 = time.perf_counter()
+for _ in range(4):
+    wk = rng.integers(1, 2**20, n_w).astype(np.int32)
+    srv.submit_write(wk, wk)
+    srv.submit(rng.choice(keys, CHUNK - n_w).astype(np.int32))
+    srv.drain()
+dt = time.perf_counter() - t0
+s = srv.stats
+rows.append({
+    "name": "serve/sharded_mixed_90_10/dup",
+    "us_per_call": dt / 4 * 1e6,
+    "derived": ";".join([
+        "keys_per_sec=%%.3e" %% (s.served / dt),
+        "batch=%%d" %% CHUNK,
+        "devices=%%d" %% DEV,
+        "write_frac=0.10",
+        "updates=%%d" %% s.updates,
+        "compactions=%%d" %% s.compactions,
+    ]),
+})
+print("ROWS_JSON:" + json.dumps(rows))
+"""
+
+
+def sharded_serve_rows(
+    chunk: int = 16384,
+    n_chunks: int = 8,
+    trials: int = 7,
+    n_keys: int = (1 << 16) - 1,
+) -> List[Row]:
+    """Sharded vs single-chip serving, same run, forced multi-device host.
+
+    Two rows per strategy (``serve/sharded_<strategy>/{sharded,single}``,
+    tagged ``spair=<strategy>``) plus one sharded mixed read/write row.
+    scripts/check_bench.py gates each strategy on ITS scaling axis: dup
+    (replicate-and-split, the throughput play) must serve at least as many
+    keys/sec as the single-chip server; hrz/hyb (subtree sharding, the
+    capacity play) must store strictly fewer nodes per device
+    (``mem_nodes_dev``) -- the deterministic figure a host-simulated mesh
+    can gate without CPU timing noise.
+    """
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    # Largest power of two in [2, 8] that fits the cores: subtree sharding
+    # needs a power-of-two mesh axis (and any such count divides the
+    # power-of-two chunk), so a 6-core host measures a 4-device mesh.
+    devices = 1 << int(math.log2(max(2, min(8, os.cpu_count() or 2))))
+    code = _SHARDED_BENCH % {
+        "devices": devices,
+        "src": os.path.join(root, "src"),
+        "chunk": chunk,
+        "n_chunks": n_chunks,
+        "trials": trials,
+        "n_keys": n_keys,
+    }
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=1800
+    )
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"sharded bench subprocess failed:\nSTDOUT:\n{out.stdout}\n"
+            f"STDERR:\n{out.stderr}"
+        )
+    payload = [
+        line for line in out.stdout.splitlines() if line.startswith("ROWS_JSON:")
+    ]
+    if not payload:
+        raise RuntimeError(f"sharded bench emitted no rows:\n{out.stdout}")
+    return [Row(**r) for r in json.loads(payload[-1][len("ROWS_JSON:"):])]

@@ -84,7 +84,7 @@ def main() -> None:
         "fig8": fig8_memory.run,
         "fig9": fig9_resources.run,
         "engine": (
-            (lambda: engine_throughput.run(n_keys=(1 << 12) - 1, batch=8192))
+            (lambda: engine_throughput.run(n_keys=(1 << 12) - 1, batch=8192, quick=True))
             if args.quick
             else engine_throughput.run
         ),

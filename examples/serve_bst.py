@@ -17,7 +17,12 @@ rebuilds.  A bulk insert/delete then swaps in a fresh immutable snapshot
 the legacy way.  The distributed section demonstrates the multi-chip
 hybrid engine: the tree vertically partitioned over a (data, model) mesh,
 keys routed by the queue-mapped all_to_all (8 simulated devices), serving
-the same ``query(op, ...)`` contract.
+the same ``query(op, ...)`` contract.  The final section scales the SERVER
+itself out (DESIGN.md §9): ``BSTServer(mesh=...)`` routes every chunk
+through the strategy's shard_map-lowered plan behind the async
+double-buffered scheduler, live writes included -- the pending delta
+buffer rides each sharded read as replicated operands and compactions
+rebuild the sharded programs mid-service.
 """
 
 import os
@@ -33,7 +38,11 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import PAPER_CONFIGS, build_tree
-from repro.core.distributed import make_distributed_query, make_dup_query
+from repro.core.distributed import (
+    make_distributed_query,
+    make_dup_query,
+    make_serving_mesh,
+)
 from repro.data.keysets import make_tree_data
 from repro.serving import BSTServer
 
@@ -151,6 +160,47 @@ def main():
             # the same handle serves ordered ops (predecessor shown)
             pk, pv, ok = query("predecessor", chunks[0])
             print(f"  {'':22s} predecessor ok for {int(np.asarray(ok).sum())} keys")
+
+    # ---- sharded serving: the server itself over the mesh (DESIGN.md §9)
+    print("\nsharded BSTServer (8 devices, double-buffered scheduler):")
+    print(f"{'strategy':10s} {'keys/s':>12s} {'chunks':>7s} {'found':>10s}")
+    n_srv = max(args.chunk * 4, args.requests // 4)
+    srv_stream = rng.choice(keys, n_srv).astype(np.int32)
+    for strategy, n_trees in (("hrz", 1), ("dup", 8), ("hyb", 8)):
+        cfg = dataclasses.replace(
+            PAPER_CONFIGS["Hyb8q" if strategy == "hyb" else "Hrz"],
+            strategy=strategy,
+            n_trees=n_trees,
+        )
+        srv = BSTServer(
+            keys, values, cfg, chunk_size=args.chunk,
+            mesh=make_serving_mesh(strategy),
+        )
+        srv.warmup()
+        srv.submit(srv_stream)
+        srv.drain()
+        s = srv.stats
+        print(f"{strategy:10s} {s.keys_per_sec:12.0f} {s.chunks:7d} {s.found:10d}")
+
+    # live writes through the sharded hybrid server: the delta buffer rides
+    # every sharded read as replicated operands, folded on-device
+    cfg = dataclasses.replace(
+        PAPER_CONFIGS["Hyb8q"], delta_capacity=4096
+    )
+    srv = BSTServer(
+        keys, values, cfg, chunk_size=args.chunk, mesh=make_serving_mesh("hyb")
+    )
+    srv.warmup()
+    wk = rng.integers(1, 2**20, args.chunk).astype(np.int32)
+    srv.submit_write(wk, wk * 5)
+    srv.submit(wk[: args.chunk // 2])
+    srv.drain()
+    v, f = srv.lookup(wk[:8])
+    print(
+        f"  sharded write path: {srv.stats.updates} updates absorbed, "
+        f"{int(np.asarray(f).sum())}/8 fresh keys found, "
+        f"{srv.stats.compactions} compaction(s)"
+    )
 
 
 if __name__ == "__main__":

@@ -1,21 +1,33 @@
 """Gatekeeper for the benchmark artifact (BENCH_*.json).
 
-Three checks, all against the SAME run's file -- no cross-run baselines to
+Four checks, all against the SAME run's file -- no cross-run baselines to
 go stale:
 
   1. schema: the file matches ``bench-rows/v1`` (re-validated here on the
      consumer side; ``benchmarks/run.py`` already checks it at write time);
   2. coverage: the engine suite must emit ordered-op rows (DESIGN.md §6),
-     mixed read/write serving rows (§7) and hyb kernel-vs-driver pairs
-     (§8) -- a silently dropped row family is a failure, not a skip;
+     mixed read/write serving rows (§7), hyb kernel-vs-driver pairs (§8)
+     and the sharded serving family (§9: ``serve/sharded_*`` rows for all
+     of hrz / dup / hyb plus a sharded mixed row) -- a silently dropped
+     row family is a failure, not a skip;
   3. regression gate: for every ``pair=<name>`` tag, the in-kernel hyb
      path (``hyb_kernel``) must not be slower than the retired
      driver-level composition (``hyb_driver``) recorded in the same run
      (beyond ``JITTER_TOLERANCE`` of timing noise).  The driver path was
      deleted from the engine precisely because the kernel path beat it;
-     this gate keeps that true.
+     this gate keeps that true;
+  4. sharded-vs-single-chip gate (same run, ``spair=<strategy>`` tags):
+     every sharded serving mode must beat the single-chip server on ITS
+     scaling axis (DESIGN.md §9).  dup -- replicate-and-split, the
+     throughput play -- must serve at least as many keys/sec (within
+     ``SHARD_JITTER_TOLERANCE``; batches are >= 4k rows by schema).
+     hrz / hyb -- subtree sharding, the capacity play -- must store
+     STRICTLY fewer nodes per device (``mem_nodes_dev``, MEASURED from
+     the runner's real shard layout, so a silently replicated operand
+     trips it), an exact number a host-simulated mesh can gate without
+     CPU timing noise.
 
-Usage: ``python scripts/check_bench.py BENCH_4.json``
+Usage: ``python scripts/check_bench.py BENCH_5.json``
 """
 
 from __future__ import annotations
@@ -39,6 +51,15 @@ JITTER_TOLERANCE = 1.10
 # shifted-compare clash loop regressing to quadratic) fails CI even
 # though the retired baseline never would catch it.
 SIBLING_TOLERANCE = 25.0
+# The dup sharded-vs-single throughput gate: both sides are interleaved
+# A/B medians over the same stream in the same subprocess, so systematic
+# regressions (a scheduler that stopped overlapping, a sharded program
+# recompiling per chunk) blow far past this, while CPU-runner noise on a
+# host-simulated mesh stays inside it.
+SHARD_JITTER_TOLERANCE = 1.25
+# The sharded rows must demonstrate serving-scale batches (acceptance:
+# the comparison holds on >= 4k-row chunks).
+SHARD_MIN_BATCH = 4096
 
 
 def derived_dict(row) -> dict:
@@ -106,13 +127,60 @@ def main(path: str) -> None:
             f"hyb kernel path slower than the retired driver baseline "
             f"(or its queue sibling's bound): {failures}"
         )
-    print(f"{path}: schema + coverage + hyb gate OK "
-          f"({len(rows)} rows, {len(complete)} pairs)")
+
+    # --- sharded serving family (DESIGN.md §9): coverage + same-run gate
+    spairs: dict = {}
+    for r in rows:
+        d = derived_dict(r)
+        if "spair" in d:
+            spairs.setdefault(d["spair"], {})[d.get("mode", "?")] = (
+                r["us_per_call"], d
+            )
+    missing = {"hrz", "dup", "hyb"} - set(spairs)
+    if missing:
+        raise SystemExit(f"missing sharded serving rows for {sorted(missing)}")
+    if not any("sharded_mixed" in r["name"] for r in rows):
+        raise SystemExit("no sharded mixed read/write row emitted")
+    sharded_failures = []
+    for strategy, modes in sorted(spairs.items()):
+        if {"sharded", "single"} - set(modes):
+            raise SystemExit(
+                f"sharded pair {strategy!r} incomplete (got {sorted(modes)})"
+            )
+        s_us, s_d = modes["sharded"]
+        c_us, c_d = modes["single"]
+        for d in (s_d, c_d):
+            if int(d.get("batch", 0)) < SHARD_MIN_BATCH:
+                raise SystemExit(
+                    f"sharded pair {strategy!r} batch {d.get('batch')} below "
+                    f"the {SHARD_MIN_BATCH}-row serving floor"
+                )
+        if strategy == "dup":
+            # The throughput play: same stream, interleaved medians.
+            print(f"shard gate dup: sharded {s_us:.0f}us vs single "
+                  f"{c_us:.0f}us ({c_us / s_us:.2f}x)")
+            if s_us > c_us * SHARD_JITTER_TOLERANCE:
+                sharded_failures.append("dup (throughput)")
+        else:
+            # The capacity play: strictly fewer stored nodes per device.
+            s_mem = int(s_d["mem_nodes_dev"])
+            c_mem = int(c_d["mem_nodes_dev"])
+            print(f"shard gate {strategy}: {s_mem} nodes/device sharded vs "
+                  f"{c_mem} single ({c_mem / max(s_mem, 1):.2f}x)")
+            if s_mem >= c_mem:
+                sharded_failures.append(f"{strategy} (mem_nodes_dev)")
+    if sharded_failures:
+        raise SystemExit(
+            f"sharded serving lost to single-chip on its scaling axis: "
+            f"{sharded_failures}"
+        )
+    print(f"{path}: schema + coverage + hyb gate + sharded gate OK "
+          f"({len(rows)} rows, {len(complete)} pairs, {len(spairs)} spairs)")
 
 
 if __name__ == "__main__":
     main(
         sys.argv[1]
         if len(sys.argv) > 1
-        else os.path.join(REPO_ROOT, "BENCH_4.json")
+        else os.path.join(REPO_ROOT, "BENCH_5.json")
     )

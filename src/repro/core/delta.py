@@ -53,7 +53,7 @@ import jax.numpy as jnp
 
 from repro.core import tree as tree_lib
 from repro.core.tree import OrderedResult, TreeData
-from repro.kernels import ref as kref
+from repro.kernels import ops as kops
 
 
 class DeltaBuffer(NamedTuple):
@@ -179,6 +179,22 @@ def ingest(
 
 
 # ------------------------------------------------------------------ resolve
+def resolve_operands(
+    delta_ops: Tuple[jax.Array, ...],
+    queries: jax.Array,
+    active: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """``resolve`` over the four flat kernel operands (see ``operands``).
+
+    This is the shard_map-friendly spelling: inside a sharded program the
+    replicated buffer exists only as plain arrays (DESIGN.md §9 folds it
+    on-device, per chip, against the local query slice), so the resolution
+    cannot take the NamedTuple.  Same math as the in-``pallas_call``
+    resolution, property-tested bit-identical.
+    """
+    return kops.bst_delta_resolve(*delta_ops, queries, active)
+
+
 def resolve(
     delta: DeltaBuffer, queries: jax.Array, active: jax.Array | None = None
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
@@ -187,17 +203,11 @@ def resolve(
     The jnp rendition of what the forest kernel computes in-``pallas_call``
     when the buffer rides as an operand (same math, property-tested
     bit-identical).  Every single-chip strategy -- hyb included since
-    DESIGN.md §8 -- resolves in-kernel; the one remaining driver-level
-    caller is the distributed return path, which folds the replicated
-    buffer after the packed collective.
+    DESIGN.md §8 -- resolves in-kernel; the sharded drivers resolve the
+    replicated operands inside their shard_map programs
+    (``resolve_operands``), so no driver-level twin remains anywhere.
     """
-    hit, dead, value, wbelow = kref.bst_delta_resolve_ref(
-        *operands(delta), queries
-    )
-    if active is not None:
-        hit = hit & active
-        wbelow = jnp.where(active, wbelow, 0)
-    return hit, dead, value, wbelow
+    return resolve_operands(operands(delta), queries, active)
 
 
 def merge_lookup(

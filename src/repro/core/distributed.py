@@ -42,11 +42,19 @@ and ``make_dup_lookup`` remain as membership shorthands.
 The live write path (DESIGN.md §7) extends the contract: ``run(op, ...,
 delta=...)`` takes a ``core.delta.DeltaBuffer`` of pending
 upserts/tombstones.  Like the register layer, the buffer is small and
-REPLICATED on every chip; its resolution composes with the packed
-``OrderedResult`` after the return collective (the kernel's jnp twin), and
-the ordered epilogues switch to rank selection over the merged key set --
-so every chip answers against snapshot + buffer without any extra
-collective.  Compaction swaps the snapshot exactly like a bulk rebuild.
+REPLICATED on every chip; since DESIGN.md §9 its resolution runs INSIDE
+the shard_map program -- each chip folds the replicated operands into its
+local slice of the packed ``OrderedResult`` in the same compiled sharded
+program as the collectives, so writes cost no extra collective and no
+driver-level jnp twin remains.  The ordered epilogues then switch to rank
+selection over the merged key set.  Compaction swaps the snapshot exactly
+like a bulk rebuild.
+
+``make_sharded_query`` is the serving-facing factory (DESIGN.md §9): one
+strategy name -- hrz / dup / hyb, the same vocabulary as ``EngineConfig``
+-- picks the mesh layout (``plans.mesh_axis_for_strategy``), the routing
+pattern and the buffer capacities, and returns the same ``run(op, ...)``
+contract, so ``BSTServer`` shards by flipping a constructor argument.
 """
 
 from __future__ import annotations
@@ -65,6 +73,20 @@ from repro.core import delta as delta_lib
 from repro.core import plans as plans_lib
 from repro.core import tree as tree_lib
 from repro.core.tree import TreeData
+
+
+def stored_nodes_per_device(*arrays) -> int:
+    """MEASURED stored key slots on the fullest device, from the arrays'
+    actual shard layout (not a formula): the per-device memory figure the
+    bench gate compares against single-chip (DESIGN.md §9).  A sharding
+    regression that silently replicated a partitioned operand shows up
+    here as an M-fold jump.
+    """
+    per: dict = {}
+    for a in arrays:
+        for s in a.addressable_shards:
+            per[s.device] = per.get(s.device, 0) + int(np.prod(s.data.shape))
+    return max(per.values()) if per else 0
 
 
 def shard_subtrees(
@@ -86,34 +108,25 @@ def shard_subtrees(
     return sub_keys, sub_vals, split_level, tree.height - split_level
 
 
-def _pack_ordered(res: plans_lib.OrderedResult, M: int, cap: int) -> jax.Array:
-    """Stack a (1, M*cap) OrderedResult into one (M, cap, F) int32 image.
-
-    The whole ordered payload rides the return routing network as ONE
-    ``all_to_all`` instead of a collective per field.
-    """
-    return jnp.stack(
-        [f[0].astype(jnp.int32).reshape(M, cap) for f in res], axis=-1
-    )
-
-
-def _unpack_ordered(packed: jax.Array) -> plans_lib.OrderedResult:
-    # NamedTuple order on both sides keeps pack/unpack structurally tied.
-    fields = tuple(packed[..., i] for i in range(packed.shape[-1]))
-    res = plans_lib.OrderedResult(*fields)
-    return res._replace(found=res.found != 0)
-
-
-def _make_query_runner(descend, tree: TreeData, rank_to_bfs: jax.Array):
+def _make_query_runner(
+    descend, tree: TreeData, rank_to_bfs: jax.Array, lookup=None
+):
     """Wrap a sharded ordered-descent into the ``run(op, ...)`` contract.
 
     One implementation of the op dispatch (operand validation, lo||hi
     concat/split, per-op epilogues from core/plans) shared by the
     all_to_all and data-parallel engines, so the contract cannot drift
     between them or from ``BSTEngine.query``.  ``delta`` (a replicated
-    ``core.delta.DeltaBuffer``) folds the pending write buffer into the
-    descent results and switches the epilogues to their delta-aware twins
-    (DESIGN.md §7) -- the collectives themselves are untouched.
+    ``core.delta.DeltaBuffer``) rides the sharded program as four flat
+    operands: ``descend(both, d_ops)`` folds the buffer ON-DEVICE inside
+    the shard_map body (DESIGN.md §9), and this wrapper only switches the
+    epilogues to their delta-aware twins (DESIGN.md §7).
+
+    ``lookup`` is an optional membership fast path: a 2-output
+    ``(queries, d_ops) -> (values, found)`` sharded program (the engine's
+    own §6 rule -- the hot lookup path pays nothing for the ordered
+    datapath).  Without it lookups ride the ordered descent and take its
+    value/found lanes.
     """
     sorted_cache: list = []  # built on the first delta call only
 
@@ -124,16 +137,17 @@ def _make_query_runner(descend, tree: TreeData, rank_to_bfs: jax.Array):
 
     def run(op: str, queries, queries_hi=None, *, k: int = 8, delta=None):
         plans_lib.validate_op(op, queries_hi is not None)
+        d_ops = None if delta is None else delta_lib.operands(delta)
+        if op == "lookup" and lookup is not None:
+            # delta-hit > tombstone > tree-hit resolves in-program, so the
+            # membership columns come back final either way.
+            return lookup(jnp.asarray(queries, jnp.int32), d_ops)
         if op in plans_lib.RANGE_OPS:
             lo = jnp.asarray(queries, jnp.int32)
             hi = jnp.asarray(queries_hi, jnp.int32)
             B = lo.shape[0]
             both = jnp.concatenate([lo, hi])
-            res = descend(both)
-            if delta is not None:
-                res = delta_lib.merge_ordered(
-                    res, *delta_lib.resolve(delta, both)
-                )
+            res = descend(both, d_ops)
             r_lo = plans_lib.OrderedResult(*(f[:B] for f in res))
             r_hi = plans_lib.OrderedResult(*(f[B:] for f in res))
             if delta is not None:
@@ -144,10 +158,9 @@ def _make_query_runner(descend, tree: TreeData, rank_to_bfs: jax.Array):
                 )
             return plans_lib.range_epilogue(op, tree, rank_to_bfs, r_lo, r_hi, k=k)
         q = jnp.asarray(queries, jnp.int32)
-        res = descend(q)
+        res = descend(q, d_ops)
         if delta is not None:
             sorted_keys, sorted_values = _sorted_view()
-            res = delta_lib.merge_ordered(res, *delta_lib.resolve(delta, q))
             return delta_lib.point_epilogue(
                 op, q, res, sorted_keys, sorted_values, tree.n_real, delta
             )
@@ -164,6 +177,7 @@ def make_distributed_query(
     stall_rounds: int = 1,
     use_kernel: bool = False,
     interpret: bool = True,
+    capacity_frac: Optional[float] = None,
 ):
     """Build a jitted distributed ``query(op, ...)`` over ``axis``.
 
@@ -173,13 +187,20 @@ def make_distributed_query(
     sharding (range_scan's gathered columns are replicated host arrays).
 
     ``capacity`` is the per-(src,dst) buffer depth; None means stall-free
-    (capacity = local batch).  ``stall_rounds`` extra rounds re-dispatch
-    overflowed keys (paper: frontend stall while buffers drain); keys still
-    pending afterwards ride one final stall-free drain round, so every
-    result is exact -- capacity/stall_rounds trade collective bytes for
-    rounds, never correctness.  ``use_kernel=True`` routes each chip's local
-    subtree descent through the forest-batched Pallas kernel.
+    (capacity = local batch).  ``capacity_frac`` instead sizes the depth
+    per TRACE as the local batch's fair share scaled by the fraction
+    (``ceil(B_local / M * frac)``), so the concatenated ``lo || hi``
+    range traces (2x the lanes) keep the same relative slack as point
+    traces instead of silently halving it.  ``stall_rounds`` extra rounds
+    re-dispatch overflowed keys (paper: frontend stall while buffers
+    drain); keys still pending afterwards ride one final stall-free drain
+    round, so every result is exact -- capacity/stall_rounds trade
+    collective bytes for rounds, never correctness.  ``use_kernel=True``
+    routes each chip's local subtree descent through the forest-batched
+    Pallas kernel.
     """
+    if capacity is not None and capacity_frac is not None:
+        raise ValueError("pass capacity OR capacity_frac, not both")
     M = mesh.shape[axis]
     sub_keys, sub_vals, split_level, sub_height = shard_subtrees(tree, mesh, axis)
     reg_n = (1 << max(split_level, 1)) - 1
@@ -205,28 +226,36 @@ def make_distributed_query(
             use_kernel=use_kernel,
             interpret=interpret,
         )
-        back = jax.lax.all_to_all(
-            _pack_ordered(sub, M, cap), axis, 0, 0, tiled=False
+        packed = plans_lib.pack_ordered(
+            plans_lib.OrderedResult(*(f[0].reshape(M, cap) for f in sub))
         )
+        back = jax.lax.all_to_all(packed, axis, 0, 0, tiled=False)
         got = plans_lib.combine_phase_ordered(
-            _unpack_ordered(back), dplan, queries.shape[0]
+            plans_lib.unpack_ordered(back), dplan, queries.shape[0]
         )
         return got, dplan.overflow
 
-    def _query_local(queries, sub_k, sub_v):
+    capped = capacity is not None or capacity_frac is not None
+
+    def _query_local(queries, sub_k, sub_v, *d_ops):
         B = queries.shape[0]
-        cap = capacity if capacity is not None else B
+        if capacity_frac is not None:
+            # Sized per trace: the lo||hi range traces see 2x the lanes
+            # and get 2x the depth, keeping the slack a real constant.
+            cap = max(1, min(B, int(math.ceil(B / M * capacity_frac))))
+        else:
+            cap = capacity if capacity is not None else B
         dest, reg = plans_lib.route_phase_ordered(
             reg_keys, reg_vals, queries, split_level, tree.height
         )
         acc = tree_lib.init_ordered(B)
         pending = ~reg.found
         # Stall rounds: overflowed keys re-enter, buffers now empty.
-        for _ in range(1 + (stall_rounds if capacity is not None else 0)):
+        for _ in range(1 + (stall_rounds if capped else 0)):
             got, overflow = _one_round(queries, dest, pending, sub_k, sub_v, cap)
             acc = plans_lib.where_ordered(pending & ~overflow, got, acc)
             pending = overflow
-        if capacity is not None:
+        if capped:
             # Final drain at capacity == local batch: queue mapping cannot
             # overflow a depth-B buffer, so NO lane is left with a partial
             # ordered result (ranks/floors must be exact, not best-effort --
@@ -244,28 +273,51 @@ def make_distributed_query(
                 jax.lax.pmax(pending.any().astype(jnp.int32), axis) > 0
             )
             acc = jax.lax.cond(any_pending, drain, lambda a: a[0], (acc, pending))
-        return tuple(plans_lib.merge_ordered(reg, acc))
+        res = plans_lib.merge_ordered(reg, acc)
+        if d_ops:
+            # On-device delta fold (DESIGN.md §9): the REPLICATED buffer
+            # resolves against this chip's local query slice inside the
+            # same compiled sharded program as the collectives -- after the
+            # register merge, so register hits see overrides too.
+            res = delta_lib.merge_ordered(
+                res, *delta_lib.resolve_operands(d_ops, queries)
+            )
+        return tuple(res)
 
-    ordered = jax.jit(
-        shard_map(
-            _query_local,
-            mesh=mesh,
-            in_specs=(P(axis), P(axis, None), P(axis, None)),
-            out_specs=tuple([P(axis)] * 7),
-            check=False,
-        )
-    )
+    # One compiled sharded program per write-path state: reads without a
+    # buffer keep the 3-operand program; the delta variant threads the four
+    # replicated buffer operands through the same shard_map body.
+    programs = {}
 
-    def _descend(queries: np.ndarray) -> plans_lib.OrderedResult:
+    def _program(with_delta: bool):
+        if with_delta not in programs:
+            n_extra = 4 if with_delta else 0
+            programs[with_delta] = jax.jit(
+                shard_map(
+                    _query_local,
+                    mesh=mesh,
+                    in_specs=(P(axis), P(axis, None), P(axis, None))
+                    + (P(),) * n_extra,
+                    out_specs=tuple([P(axis)] * 7),
+                    check=False,
+                )
+            )
+        return programs[with_delta]
+
+    def _descend(queries, d_ops=None) -> plans_lib.OrderedResult:
         q = jax.device_put(
             jnp.asarray(queries, jnp.int32), NamedSharding(mesh, P(axis))
         )
-        return plans_lib.OrderedResult(*ordered(q, sub_keys, sub_vals))
+        extra = tuple(d_ops) if d_ops is not None else ()
+        return plans_lib.OrderedResult(
+            *_program(bool(extra))(q, sub_keys, sub_vals, *extra)
+        )
 
     run = _make_query_runner(_descend, tree, rank_to_bfs)
     run.mesh = mesh
     run.capacity = capacity
     run.split_level = split_level
+    run.device_nodes = stored_nodes_per_device(sub_keys, reg_keys)
     return run
 
 
@@ -299,41 +351,93 @@ def make_distributed_lookup(
     return run
 
 
-def make_dup_query(tree: TreeData, mesh: Mesh, axis: str = "data"):
+def make_dup_query(
+    tree: TreeData,
+    mesh: Mesh,
+    axis: str = "data",
+    use_kernel: bool = False,
+    interpret: bool = True,
+):
     """DupN as data parallelism: replicate the tree, shard the query stream.
 
     Returns the same ``run(op, ...)`` contract as ``make_distributed_query``
     -- each replica group runs the full ordered descent on its slice, so
-    every op is embarrassingly parallel here.
+    every op is embarrassingly parallel here.  ``use_kernel=True`` lowers
+    each replica's local descent through the forest-batched Pallas kernel;
+    ``delta`` folds the replicated write buffer on-device per replica
+    (DESIGN.md §9).  Lookups take a MEMBERSHIP fast-path program (the
+    kernel's 2-output configuration, the engine's own §6 rule): with no
+    collectives to share, the hot path pays nothing for the ordered
+    datapath's extra tracking or return lanes.
     """
     keys = jax.device_put(tree.keys, NamedSharding(mesh, P()))
     vals = jax.device_put(tree.values, NamedSharding(mesh, P()))
     rank_to_bfs = jnp.asarray(tree_lib.rank_to_bfs_indices(tree.height))
 
-    def _local(queries, k, v):
+    def _local(queries, k, v, *d_ops):
         res = plans_lib.descend_phase_ordered(
-            k[None, :], v[None, :], tree.height, queries[None, :]
+            k[None, :],
+            v[None, :],
+            tree.height,
+            queries[None, :],
+            use_kernel=use_kernel,
+            interpret=interpret,
         )
-        return tuple(f[0] for f in res)
+        res = plans_lib.OrderedResult(*(f[0] for f in res))
+        if d_ops:
+            res = delta_lib.merge_ordered(
+                res, *delta_lib.resolve_operands(d_ops, queries)
+            )
+        return tuple(res)
 
-    ordered = jax.jit(
-        shard_map(
-            _local,
-            mesh=mesh,
-            in_specs=(P(axis), P(), P()),
-            out_specs=tuple([P(axis)] * 7),
-            check=False,
+    def _local_lookup(queries, k, v, *d_ops):
+        val, found = plans_lib.descend_phase(
+            k[None, :],
+            v[None, :],
+            tree.height,
+            queries[None, :],
+            use_kernel=use_kernel,
+            interpret=interpret,
         )
-    )
+        val, found = val[0], found[0]
+        if d_ops:
+            hit, dead, d_val, _ = delta_lib.resolve_operands(d_ops, queries)
+            val, found = delta_lib.merge_lookup(val, found, hit, dead, d_val)
+        return val, found
 
-    def _descend(queries) -> plans_lib.OrderedResult:
+    programs = {}
+
+    def _program(body, n_out: int, with_delta: bool):
+        key = (body.__name__, with_delta)
+        if key not in programs:
+            n_extra = 4 if with_delta else 0
+            programs[key] = jax.jit(
+                shard_map(
+                    body,
+                    mesh=mesh,
+                    in_specs=(P(axis), P(), P()) + (P(),) * n_extra,
+                    out_specs=tuple([P(axis)] * n_out),
+                    check=False,
+                )
+            )
+        return programs[key]
+
+    def _call(body, n_out, queries, d_ops):
         q = jax.device_put(
             jnp.asarray(queries, jnp.int32), NamedSharding(mesh, P(axis))
         )
-        return plans_lib.OrderedResult(*ordered(q, keys, vals))
+        extra = tuple(d_ops) if d_ops is not None else ()
+        return _program(body, n_out, bool(extra))(q, keys, vals, *extra)
 
-    run = _make_query_runner(_descend, tree, rank_to_bfs)
+    def _descend(queries, d_ops=None) -> plans_lib.OrderedResult:
+        return plans_lib.OrderedResult(*_call(_local, 7, queries, d_ops))
+
+    def _lookup(queries, d_ops=None):
+        return _call(_local_lookup, 2, queries, d_ops)
+
+    run = _make_query_runner(_descend, tree, rank_to_bfs, lookup=_lookup)
     run.mesh = mesh
+    run.device_nodes = stored_nodes_per_device(keys)
     return run
 
 
@@ -346,4 +450,79 @@ def make_dup_lookup(tree: TreeData, mesh: Mesh, axis: str = "data"):
 
     run.mesh = query.mesh
     run.query = query
+    return run
+
+
+# ------------------------------------------------------------ sharded serving
+def make_serving_mesh(strategy: str, devices=None) -> Mesh:
+    """A 1-D mesh over ``devices`` named for the strategy's shard axis.
+
+    The serving layer shards over ONE axis (DESIGN.md §9): the batch for
+    dup, the tree for hrz/hyb.  ``plans.mesh_axis_for_strategy`` picks the
+    name, so a mesh built here always satisfies ``make_sharded_query``.
+    """
+    axis = plans_lib.mesh_axis_for_strategy(strategy)
+    devs = list(jax.devices()) if devices is None else list(devices)
+    return Mesh(np.asarray(devs), (axis,))
+
+
+def make_sharded_query(
+    tree: TreeData,
+    mesh: Mesh,
+    strategy: str,
+    *,
+    buffer_slack: float = 2.0,
+    stall_rounds: int = 1,
+    use_kernel: bool = False,
+    interpret: bool = True,
+):
+    """The serving-facing sharded factory (DESIGN.md §9).
+
+    One strategy name -- the same hrz / dup / hyb vocabulary as
+    ``EngineConfig`` -- picks the whole mesh layout:
+
+      * ``hrz``: the tree vertically partitioned into per-device subtrees,
+        chunks routed by the STALL-FREE all_to_all (capacity == local
+        batch -- one round, maximal collective bytes);
+      * ``dup``: the tree replicated, the chunk split over the axis (pure
+        data parallelism, no routing traffic);
+      * ``hyb``: subtree-sharded forest + replicated register layer with
+        the paper's queue-capped dispatch buffers: per-(src,dst) capacity
+        sized PER TRACE as the local batch's fair share scaled by
+        ``buffer_slack`` (so range ops' doubled lo||hi lanes keep the same
+        relative slack) plus ``stall_rounds`` -- collective bytes traded
+        for rounds, correctness guaranteed by the final drain round.
+
+    Returns the ``run(op, queries, queries_hi=None, *, k=8, delta=None)``
+    contract of ``make_distributed_query``; ``delta`` folds on-device
+    inside the sharded program.  The caller must keep global batches
+    divisible by the axis size (``BSTServer`` pads its fixed-shape chunks
+    and enforces divisibility at construction).
+    """
+    axis = plans_lib.mesh_axis_for_strategy(strategy)
+    if axis not in mesh.axis_names:
+        raise ValueError(
+            f"strategy {strategy!r} shards over mesh axis {axis!r}, but the "
+            f"mesh has {mesh.axis_names} -- build one with make_serving_mesh"
+        )
+    if strategy == "dup":
+        run = make_dup_query(
+            tree, mesh, axis=axis, use_kernel=use_kernel, interpret=interpret
+        )
+        run.capacity_frac = None
+    else:
+        frac = buffer_slack if strategy == "hyb" else None
+        run = make_distributed_query(
+            tree,
+            mesh,
+            axis=axis,
+            capacity_frac=frac,  # hrz: None -> stall-free routing
+            stall_rounds=stall_rounds,
+            use_kernel=use_kernel,
+            interpret=interpret,
+        )
+        run.capacity_frac = frac
+    run.strategy = strategy
+    run.axis = axis
+    run.n_shards = mesh.shape[axis]
     return run

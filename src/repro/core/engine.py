@@ -152,6 +152,13 @@ class BSTEngine:
         # count scalar, at the cost of compacting a touch early.
         self._pending_writes = 0
         self.compactions = getattr(self, "compactions", 0)
+        # Snapshot-swap hook (DESIGN.md §9): a swap can fire deep inside
+        # apply_ops' chunk loop (compaction) or in apply_updates' bulk
+        # rebuild, and anything compiled against the OLD snapshot (the
+        # sharded server's shard_map programs) must rebuild before the next
+        # read.  Called with the fresh TreeData after EVERY snapshot swap;
+        # None by default.
+        self.on_snapshot = getattr(self, "on_snapshot", None)
 
     # ------------------------------------------------------------------ query
     def query(self, op: str, queries, queries_hi=None, *, k: int = 8):
@@ -307,6 +314,8 @@ class BSTEngine:
                 tree = updates_lib.bulk_insert(tree, ik, iv)
             self.tree = tree
             self._finalize()
+            if self.on_snapshot is not None:
+                self.on_snapshot(self.tree)
             return tree
         keys = np.concatenate([dk, ik])
         values = np.concatenate([np.zeros(dk.size, np.int32), iv])
@@ -328,6 +337,8 @@ class BSTEngine:
         self.tree = delta_lib.compact(self.tree, self.delta)
         self.compactions += 1
         self._finalize()
+        if self.on_snapshot is not None:
+            self.on_snapshot(self.tree)
         return self.tree
 
     def pending_writes(self) -> int:

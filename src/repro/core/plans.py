@@ -50,6 +50,29 @@ from repro.kernels import ops as kops
 QUERY_OPS = ("lookup", "predecessor", "successor", "range_count", "range_scan")
 RANGE_OPS = ("range_count", "range_scan")
 
+# How each engine strategy lays out over a serving mesh (DESIGN.md §9):
+#   hrz -- the one tree vertically partitioned into per-device subtrees;
+#          request chunks route through the stall-free all_to_all network;
+#   dup -- the tree replicated on every device, the chunk split over the
+#          axis (data parallelism, no routing traffic at all);
+#   hyb -- subtree-sharded forest + replicated register layer, with the
+#          paper's queue-capped dispatch buffers as the collective-bytes
+#          lever (finite capacity + stall rounds).
+# ``mesh_axis_for_strategy`` is the single place that mapping lives, so the
+# server, the benchmarks and the examples cannot disagree on which mesh
+# axis a strategy shards over.
+SHARDED_STRATEGIES = ("hrz", "dup", "hyb")
+
+
+def mesh_axis_for_strategy(strategy: str) -> str:
+    """The mesh axis a sharded plan uses: dup shards the *batch* over the
+    data axis; hrz/hyb shard the *tree* over the model axis."""
+    if strategy not in SHARDED_STRATEGIES:
+        raise ValueError(
+            f"unknown sharded strategy {strategy!r} (want {SHARDED_STRATEGIES})"
+        )
+    return "data" if strategy == "dup" else "model"
+
 
 def validate_op(op: str, has_hi: bool) -> None:
     """One place for the op-name / operand-arity contract checks -- shared
@@ -364,6 +387,23 @@ def combine_phase_ordered(
             for field, fill in zip(sub, fills)
         )
     )
+
+
+def pack_ordered(res: OrderedResult) -> jax.Array:
+    """Stack the 7 ordered fields into one ``(..., F)`` int32 image.
+
+    The whole ordered payload then rides a routing collective as ONE
+    ``all_to_all`` (or one device transfer) instead of a collective per
+    field -- the packed-combine contract of DESIGN.md §9.
+    """
+    return jnp.stack([f.astype(jnp.int32) for f in res], axis=-1)
+
+
+def unpack_ordered(packed: jax.Array) -> OrderedResult:
+    # NamedTuple order on both sides keeps pack/unpack structurally tied.
+    fields = tuple(packed[..., i] for i in range(packed.shape[-1]))
+    res = OrderedResult(*fields)
+    return res._replace(found=res.found != 0)
 
 
 def merge_ordered(reg: OrderedResult, sub: OrderedResult) -> OrderedResult:

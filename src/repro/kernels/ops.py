@@ -261,6 +261,35 @@ def bst_search(
     )
 
 
+@jax.jit
+def bst_delta_resolve(
+    delta_keys: jax.Array,
+    delta_values: jax.Array,
+    delta_tombstone: jax.Array,
+    delta_weight: jax.Array,
+    queries: jax.Array,
+    active: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Delta-buffer resolution over the four flat operands (DESIGN.md §7).
+
+    Per-query ``(hit, dead, value, weight_below)`` against the sorted write
+    buffer -- the same math the forest kernels apply in-``pallas_call``
+    when the buffer rides as an operand.  Public so drivers whose descent
+    the kernel cannot absorb (the sharded shard_map programs, DESIGN.md
+    §9) fold the REPLICATED buffer on-device through the one contract
+    entry point instead of reaching into ``kernels/ref``.  ``active``
+    masks lanes whose resolution must not contribute (padding, unplaced
+    stall lanes): their hit drops and their rank correction zeroes.
+    """
+    hit, dead, value, wbelow = ref.bst_delta_resolve_ref(
+        delta_keys, delta_values, delta_tombstone, delta_weight, queries
+    )
+    if active is not None:
+        hit = hit & active
+        wbelow = jnp.where(active, wbelow, 0)
+    return hit, dead, value, wbelow
+
+
 @functools.partial(
     jax.jit, static_argnames=("n_dest", "capacity", "interpret", "use_ref")
 )

@@ -1,31 +1,117 @@
-"""Serving driver: batched greedy decoding with prefill + KV cache.
+"""Serving drivers: LM decoding, and the sharded BST store (DESIGN.md §9).
 
-Usage:
+LM mode -- batched greedy decoding with prefill + KV cache:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
       --batch 4 --prompt-len 32 --new-tokens 16
+
+BST mode -- the paper's accelerator served sharded over a host-simulated
+mesh: ``BSTServer(mesh=...)`` routes fixed-shape chunks through the
+strategy's shard_map-lowered plan behind the async double-buffered
+scheduler, with live writes riding the replicated delta buffer:
+  PYTHONPATH=src python -m repro.launch.serve --bst --bst-strategy hyb \
+      --bst-devices 8 --requests 100000 --chunk 8192
 """
 
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
+
+# The forced host-device count must be set BEFORE jax initializes, and only
+# the BST mode wants it (the LM path keeps the real devices), so the flag
+# is argv-gated ahead of the jax import.
+if "--bst" in sys.argv:
+    _n = 8
+    for _i, _a in enumerate(sys.argv):
+        if _a == "--bst-devices" and _i + 1 < len(sys.argv):
+            _n = int(sys.argv[_i + 1])
+        elif _a.startswith("--bst-devices="):
+            _n = int(_a.split("=", 1)[1])
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={_n}"
+    )
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config, smoke_config
-from repro.models import model as M
-from repro.serving.serve_loop import make_serve_step
+
+def bst_main(args) -> None:
+    """Serve a lookup + mixed write stream through the sharded BSTServer."""
+    import numpy as np
+
+    from repro.core.distributed import make_serving_mesh
+    from repro.core.engine import EngineConfig
+    from repro.data.keysets import make_tree_data
+    from repro.serving import BSTServer
+
+    strategy = args.bst_strategy
+    mesh = make_serving_mesh(strategy)
+    # The real device count can differ from --bst-devices when the
+    # environment preset XLA_FLAGS (the argv gate never overrides it).
+    n_devices = int(mesh.devices.size)
+    n_trees = 1 if strategy == "hrz" else max(2, n_devices)
+    cfg = EngineConfig(
+        strategy=strategy,
+        n_trees=n_trees,
+        mapping="queue",
+        delta_capacity=args.chunk // 2,
+    )
+    keys, values = make_tree_data((1 << 16) - 1, seed=0)
+    srv = BSTServer(keys, values, cfg, chunk_size=args.chunk, mesh=mesh)
+    srv.warmup()
+    rng = np.random.default_rng(1)
+    stream = rng.choice(keys, args.requests).astype(np.int32)
+
+    t0 = time.time()
+    srv.submit(stream)
+    srv.drain()
+    dt = time.time() - t0
+    s = srv.stats
+    print(
+        f"sharded {strategy} x {n_devices} devices: "
+        f"{args.requests} lookups in {dt:.2f}s "
+        f"({s.keys_per_sec:.0f} keys/s busy, {s.found} found, "
+        f"{s.chunks} chunks)"
+    )
+
+    # a mixed tail: writes ride the replicated delta buffer on-device
+    wk = rng.integers(1, 2**20, args.chunk).astype(np.int32)
+    srv.submit_write(wk, wk * 3)
+    srv.submit(wk[: args.chunk // 2])
+    srv.drain()
+    v, f = srv.lookup(wk[:16])
+    print(
+        f"write path: {srv.stats.updates} updates absorbed on device, "
+        f"{int(np.asarray(f).sum())}/16 fresh keys found, "
+        f"{srv.stats.compactions} compaction(s)"
+    )
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    # BST sharded serving mode (DESIGN.md §9)
+    ap.add_argument("--bst", action="store_true", help="serve the BST store")
+    ap.add_argument("--bst-strategy", default="hyb", choices=("hrz", "dup", "hyb"))
+    ap.add_argument("--bst-devices", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=100_000)
+    ap.add_argument("--chunk", type=int, default=8_192)
     args = ap.parse_args(argv)
+
+    if args.bst:
+        return bst_main(args)
+    if args.arch is None:
+        ap.error("--arch is required (or pass --bst for the BST store)")
+
+    from repro.configs import get_config, smoke_config
+    from repro.models import model as M
+    from repro.serving.serve_loop import make_serve_step
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params = M.init_params(cfg, jax.random.key(0))

@@ -38,7 +38,23 @@ atomically between chunks.  This module is that loop, TPU-native:
     actually occupied (one per point/write/delete key, two per range
     request -- the lo||hi concatenated descent), so mixed spans cannot
     skew one op's ``keys_per_sec`` with another op's time;
-    ``lanes_per_sec`` is the figure comparable across op mixes.
+    ``lanes_per_sec`` is the figure comparable across op mixes;
+  * **sharded mode** (DESIGN.md §9) -- construct with ``mesh=`` and every
+    read chunk routes through the strategy's shard_map-lowered plan
+    (``core.distributed.make_sharded_query``: hrz shards the tree by
+    subtree behind the all_to_all router, dup replicates the tree and
+    splits the chunk, hyb shards the vertical forest and replicates the
+    register layer).  Chunks are served by an async DOUBLE-BUFFERED
+    scheduler: the next fixed-shape chunk is formed and dispatched while
+    the previous one is still in flight, and the sync point trails one
+    chunk behind, so host-side packing overlaps device compute.  The
+    write path is unchanged -- ingest classifies against the local
+    snapshot, and the pending buffer rides every sharded read as four
+    REPLICATED operands folded on-device inside the sharded program; a
+    compaction rebuilds the sharded programs via the engine's
+    ``on_snapshot`` hook before the next read.  ``chunk_size`` must
+    divide by the mesh axis size (chunks are always padded full, so no
+    unpadded partial chunk can ever reach a sharded program).
 """
 
 from __future__ import annotations
@@ -50,6 +66,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.core import distributed as dist_lib
 from repro.core import plans as plans_lib
 from repro.core import tree as tree_lib
 from repro.core import updates as updates_lib
@@ -141,6 +158,7 @@ class BSTServer:
         config: EngineConfig = EngineConfig(),
         chunk_size: int = 8192,
         scan_k: int = 8,
+        mesh=None,
     ):
         if chunk_size < 1:
             raise ValueError("chunk_size must be positive")
@@ -149,6 +167,27 @@ class BSTServer:
         self.config = config
         self.chunk_size = chunk_size
         self.scan_k = scan_k
+        self.mesh = mesh
+        self._squery = None
+        if mesh is not None:
+            axis = plans_lib.mesh_axis_for_strategy(config.strategy)
+            if axis not in mesh.axis_names:
+                raise ValueError(
+                    f"strategy {config.strategy!r} shards over axis {axis!r}; "
+                    f"the mesh has {mesh.axis_names} (see "
+                    "distributed.make_serving_mesh)"
+                )
+            n_shards = mesh.shape[axis]
+            if chunk_size % n_shards:
+                # Sharded programs are fixed-shape SPMD: an unpadded chunk
+                # whose batch does not divide over the axis has no legal
+                # placement, so the contract fails loudly at construction
+                # instead of deep inside shard_map (DESIGN.md §9).
+                raise ValueError(
+                    f"chunk_size={chunk_size} must be divisible by the mesh "
+                    f"axis {axis!r} size {n_shards} -- sharded chunks split "
+                    "evenly across devices"
+                )
         self.stats = ServerStats()
         self._pending: List[_Request] = []
         self._pending_keys = 0
@@ -166,10 +205,27 @@ class BSTServer:
     # --------------------------------------------------------------- snapshot
     def _install(self, tree: TreeData) -> None:
         self._engine = BSTEngine.from_tree(tree, self.config)
+        if self.mesh is not None:
+            self._install_sharded(tree)
+            # Compaction can swap the snapshot deep inside apply_ops'
+            # chunk loop; the hook rebuilds the sharded programs before
+            # any later read can see the stale tree (DESIGN.md §9).
+            self._engine.on_snapshot = self._install_sharded
         if self._warm_ops:
             # The fresh engine's jit closes over the new snapshot; re-warm so
             # post-swap chunks (and keys/sec accounting) stay compile-free.
             self.warmup(self._warm_ops)
+
+    def _install_sharded(self, tree: TreeData) -> None:
+        cfg = self.config
+        self._squery = dist_lib.make_sharded_query(
+            tree,
+            self.mesh,
+            cfg.strategy,
+            buffer_slack=cfg.buffer_slack,
+            use_kernel=cfg.use_kernel,
+            interpret=cfg.interpret,
+        )
 
     @property
     def snapshot(self) -> TreeData:
@@ -189,12 +245,27 @@ class BSTServer:
         """
         dummy = np.zeros(self.chunk_size, np.int32)
         for op in ops:
-            if op in RANGE_OPS:
-                out = self._engine.query(op, dummy, dummy, k=self.scan_k)
-            else:
-                out = self._engine.query(op, dummy)
+            out = self._query_chunk(op, dummy, dummy)
             jax.block_until_ready(out)
         self._warm_ops = tuple(dict.fromkeys(self._warm_ops + tuple(ops)))
+
+    def _query_chunk(self, op: str, a, b) -> tuple:
+        """One fixed-shape chunk through the serving datapath: the sharded
+        shard_map program when a mesh is installed, the local engine
+        otherwise.  The pending delta buffer rides sharded reads as
+        replicated operands (on-device fold, DESIGN.md §9); the engine
+        threads its own buffer internally."""
+        if self._squery is not None:
+            kw = {"delta": self._engine.delta} if self._engine.delta is not None else {}
+            if op in RANGE_OPS:
+                res = self._squery(op, a, b, k=self.scan_k, **kw)
+            else:
+                res = self._squery(op, a, **kw)
+        elif op in RANGE_OPS:
+            res = self._engine.query(op, a, b, k=self.scan_k)
+        else:
+            res = self._engine.query(op, a)
+        return res if isinstance(res, tuple) else (res,)
 
     def apply_updates(
         self,
@@ -455,16 +526,13 @@ class BSTServer:
             a = np.pad(a, (0, pad))
             if b is not None:
                 b = np.pad(b, (0, pad))
+        if self._squery is not None:
+            return self._serve_stream_sharded(op, a, b, B)
         columns = None
         for lo in range(0, a.size, self.chunk_size):
             sl = slice(lo, lo + self.chunk_size)
             t0 = time.perf_counter()
-            if op in RANGE_OPS:
-                res = self._engine.query(op, a[sl], b[sl], k=self.scan_k)
-            else:
-                res = self._engine.query(op, a[sl])
-            if not isinstance(res, tuple):
-                res = (res,)
+            res = self._query_chunk(op, a[sl], None if b is None else b[sl])
             jax.block_until_ready(res)
             dt = time.perf_counter() - t0
             real = min(self.chunk_size, B - lo)  # non-padded lanes this chunk
@@ -478,18 +546,75 @@ class BSTServer:
             ops.busy_s += dt
             ops.chunks += 1
             ops.lanes += lanes
-            if columns is None:
-                columns = [
-                    np.empty((a.size,) + np.asarray(c).shape[1:], np.asarray(c).dtype)
-                    for c in res
-                ]
-            for col, c in zip(columns, res):
-                col[sl] = np.asarray(c)
+            columns = self._fill_columns(columns, a.size, sl, res)
             if op == "lookup":
                 # hits accumulated per chunk, padded lanes excluded
                 self.stats.found += int(np.asarray(res[1])[:real].sum())
         self.stats.served += B
         self.stats.op(op).served += B
+        return [col[:B] for col in columns]
+
+    def _fill_columns(self, columns, total: int, sl: slice, res: tuple):
+        """Copy one chunk's result tuple into the stream-sized host columns."""
+        if columns is None:
+            columns = [
+                np.empty((total,) + np.asarray(c).shape[1:], np.asarray(c).dtype)
+                for c in res
+            ]
+        for col, c in zip(columns, res):
+            col[sl] = np.asarray(c)
+        return columns
+
+    def _serve_stream_sharded(
+        self, op: str, a: np.ndarray, b: Optional[np.ndarray], B: int
+    ):
+        """The async double-buffered scheduler (DESIGN.md §9).
+
+        Chunk ``i+1`` is formed (sliced, converted, device_put) and
+        DISPATCHED while chunk ``i`` is still in flight; the sync point
+        trails one chunk behind dispatch, so host-side packing and result
+        unpacking overlap device compute instead of serializing on a
+        per-chunk ``block_until_ready``.  Busy seconds are the pipeline's
+        wall time (first dispatch to last retire) -- the honest serving
+        figure for an overlapped scheduler; per-chunk timings would double
+        count the overlap.  Lane/found accounting is identical to the
+        single-chip loop: padded lanes never reach results or counters.
+        """
+        columns = None
+        found = 0
+        inflight: List[Tuple[slice, int, tuple]] = []
+        n_chunks = 0
+
+        def retire(r_sl: slice, r_lo: int, r_res: tuple):
+            nonlocal columns, found
+            jax.block_until_ready(r_res)
+            columns = self._fill_columns(columns, a.size, r_sl, r_res)
+            if op == "lookup":
+                real = min(self.chunk_size, B - r_lo)
+                found += int(np.asarray(r_res[1])[:real].sum())
+
+        t0 = time.perf_counter()
+        for lo in range(0, a.size, self.chunk_size):
+            sl = slice(lo, lo + self.chunk_size)
+            res = self._query_chunk(op, a[sl], None if b is None else b[sl])
+            inflight.append((sl, lo, res))
+            n_chunks += 1
+            if len(inflight) > 1:  # depth-2 pipeline: retire the older chunk
+                retire(*inflight.pop(0))
+        for flying in inflight:
+            retire(*flying)
+        dt = time.perf_counter() - t0
+        lanes = B * (2 if op in RANGE_OPS else 1)
+        self.stats.busy_s += dt
+        self.stats.chunks += n_chunks
+        self.stats.lanes += lanes
+        self.stats.found += found
+        self.stats.served += B
+        ops = self.stats.op(op)
+        ops.busy_s += dt
+        ops.chunks += n_chunks
+        ops.lanes += lanes
+        ops.served += B
         return [col[:B] for col in columns]
 
     # ------------------------------------------------------------ convenience
@@ -530,3 +655,11 @@ class BSTServer:
 
     def memory_nodes(self) -> int:
         return self._engine.memory_nodes()
+
+    def memory_nodes_per_device(self) -> int:
+        """Stored key slots on the fullest device, MEASURED from the real
+        shard layout in sharded mode (DESIGN.md §9's capacity figure;
+        falls back to the snapshot's node count single-chip)."""
+        if self._squery is not None:
+            return int(self._squery.device_nodes)
+        return int(self._engine.tree.n_nodes)

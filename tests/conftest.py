@@ -1,9 +1,12 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here -- smoke tests and benches must
-see the real single-CPU device; only launch/dryrun.py (a separate process)
-forces 512 placeholder devices."""
+see the real single-CPU device; the multi-device cases (``multi_device_host``
+below, launch/dryrun.py) force their device counts in SEPARATE processes."""
 
 import importlib.util
 import os
+import subprocess
+import sys
+import textwrap
 
 import numpy as np
 import pytest
@@ -39,6 +42,41 @@ def pytest_addoption(parser):
 
 from repro.core import tree as tree_lib
 from repro.data.keysets import make_tree_data
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_forced_multi_device(body: str, devices: int = 8, timeout: int = 1800) -> str:
+    """Run a test snippet on a forced ``devices``-CPU host.
+
+    The XLA device-count flag must be set BEFORE jax initializes, and this
+    process must keep its single real device, so the snippet executes in a
+    subprocess with the repo's src on the path and the common imports
+    (numpy/jax/make_mesh) pre-bound -- the shared implementation behind
+    tests/test_distributed.py and the sharded differential suite.
+    """
+    code = textwrap.dedent(
+        f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+        import sys
+        sys.path.insert(0, {os.path.join(_ROOT, 'src')!r})
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.sharding.compat import make_mesh
+        """
+    ) + textwrap.dedent(body)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=timeout
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def multi_device_host():
+    """Fixture handle on ``run_forced_multi_device`` (8 fake devices default)."""
+    return run_forced_multi_device
 
 
 @pytest.fixture(scope="session")

@@ -10,7 +10,16 @@ writes before it).  Coverage axes:
   * pre-compaction (live buffer) and post-compaction (fresh snapshot)
     states -- every sequence is re-probed right after a forced ``compact()``;
   * the ≥ 500-op mixed-stream acceptance gate through ``BSTServer``'s typed
-    write/delete request kinds, per strategy.
+    write/delete request kinds, per strategy;
+  * the SHARDED serving paths (DESIGN.md §9): on a forced 8-device host
+    (the ``multi_device_host`` conftest fixture -- XLA device counts must
+    precede jax init, so the body runs subprocess-side), a sharded
+    ``BSTServer`` drains the same submission sequence as a single-chip
+    server and must match BIT-FOR-BIT, for hrz / dup / hyb x kernel /
+    reference descent x pre-/post-compaction, live writes included; plus
+    a ≥ 500-op mixed read/write soak per mix ratio that cross-checks the
+    per-op ``OpStats`` lane accounting and the ``keys_per_sec`` /
+    ``lanes_per_sec`` invariants against the submitted op counts.
 
 Runs under real hypothesis or the deterministic ``_hypothesis_fallback``
 shim alike (the strategies stick to the shim's subset).  Reads are flushed
@@ -396,3 +405,173 @@ def test_server_mixed_stream_500_ops(name):
     assert srv.stats.updates > 0
     assert srv.stats.compactions > 0, "stream must cross the high-water mark"
     assert srv.pending() == 0
+
+
+# --------------------------------------------------- sharded serving paths
+def test_sharded_differential_all_strategies(multi_device_host):
+    """Sharded == single-chip, bit for bit, on the same op sequence.
+
+    A sharded BSTServer (forced 8-device host) and a single-chip server
+    take IDENTICAL submissions -- mixed writes, deletes and every read op
+    -- and every drained column must match exactly, for hrz / dup / hyb,
+    reference and Pallas-kernel descents, with reads landing both before
+    and after compactions (the delta capacity is sized so the stream
+    crosses the high-water mark mid-sequence)."""
+    multi_device_host("""
+        from repro.core import distributed as D
+        from repro.core.engine import EngineConfig
+        from repro.data.keysets import make_tree_data
+        from repro.serving import BSTServer
+
+        keys, values = make_tree_data(150, seed=3, spacing=3)
+        rng = np.random.default_rng(5)
+
+        def drive(srv, ref, rounds, n_writes, n_reads):
+            compact_seen = 0
+            for r in range(rounds):
+                tickets = []
+                wk = rng.integers(1, 600, n_writes).astype(np.int32)
+                wv = rng.integers(0, 10**6, n_writes).astype(np.int32)
+                tickets.append((srv.submit_write(wk, wv), ref.submit_write(wk, wv)))
+                dk = rng.integers(1, 600, max(1, n_writes // 3)).astype(np.int32)
+                tickets.append((srv.submit_delete(dk), ref.submit_delete(dk)))
+                q = rng.integers(1, 660, n_reads).astype(np.int32)
+                span = rng.integers(0, 40, n_reads).astype(np.int32)
+                for op in ("lookup", "predecessor", "successor"):
+                    tickets.append((srv.submit(q, op=op), ref.submit(q, op=op)))
+                for op in ("range_count", "range_scan"):
+                    tickets.append((
+                        srv.submit_range(q, q + span, op=op),
+                        ref.submit_range(q, q + span, op=op),
+                    ))
+                out_s, out_r = srv.drain(), ref.drain()
+                for ts, tr in tickets:
+                    for cs, cr in zip(out_s[ts], out_r[tr]):
+                        assert np.array_equal(np.asarray(cs), np.asarray(cr)), (
+                            r, ts)
+                if compact_seen == 0 and srv.stats.compactions > 0:
+                    compact_seen = r + 1  # later rounds probe post-compaction
+            assert srv.stats.compactions == ref.stats.compactions
+            return compact_seen
+
+        for strategy, use_kernel, rounds, n_reads in (
+            ("hrz", False, 4, 96), ("dup", False, 4, 96), ("hyb", False, 4, 96),
+            ("hrz", True, 2, 48), ("dup", True, 2, 48), ("hyb", True, 2, 48),
+        ):
+            cfg = EngineConfig(
+                strategy=strategy,
+                n_trees=1 if strategy == "hrz" else 4,
+                use_kernel=use_kernel,
+                delta_capacity=48,
+                delta_high_water=40,
+            )
+            mesh = D.make_serving_mesh(strategy)
+            srv = BSTServer(keys, values, cfg, chunk_size=32, scan_k=4, mesh=mesh)
+            ref = BSTServer(keys, values, cfg, chunk_size=32, scan_k=4)
+            compact_round = drive(srv, ref, rounds, n_writes=24, n_reads=n_reads)
+            # pre- AND post-compaction reads must both have been compared
+            assert srv.stats.compactions > 0, (strategy, use_kernel)
+            assert 0 < compact_round <= rounds, (strategy, use_kernel)
+            print("ok", strategy, "kernel" if use_kernel else "ref",
+                  "compactions", srv.stats.compactions)
+        print("ALL OK")
+    """, timeout=2400)
+
+
+def test_sharded_server_soak_mixed_accounting(multi_device_host):
+    """≥ 500-op mixed read/write soak through the sharded server, per mix.
+
+    Beyond correctness (lookups cross-checked against a dict oracle), the
+    per-op ``OpStats`` lane accounting and throughput figures must tie out
+    EXACTLY against the submitted op counts: one lane per point/write/
+    delete key, two per range request, busy seconds partitioning into the
+    per-op attributions, and keys/lanes-per-sec being served/lanes over
+    busy time."""
+    multi_device_host("""
+        from repro.core import distributed as D
+        from repro.core.engine import EngineConfig
+        from repro.data.keysets import make_tree_data
+        from repro.serving import BSTServer
+
+        keys, values = make_tree_data(150, seed=9, spacing=3)
+        for mix, write_frac in (("90_10", 0.10), ("50_50", 0.50)):
+            rng = np.random.default_rng(17 if mix == "90_10" else 23)
+            cfg = EngineConfig(
+                strategy="hyb", n_trees=4,
+                delta_capacity=64, delta_high_water=24,
+            )
+            srv = BSTServer(
+                keys, values, cfg, chunk_size=64, scan_k=4,
+                mesh=D.make_serving_mesh("hyb"),
+            )
+            kv = dict(zip(keys.tolist(), values.tolist()))
+            n_ops = 520
+            counts = {}
+            expected = {}  # ticket -> (op, key, kv-at-submit)
+            kinds = ("write", "delete", "lookup", "predecessor",
+                     "successor", "range_count", "range_scan")
+            w = write_frac
+            probs = [w * 0.7, w * 0.3] + [(1 - w) / 5] * 5
+            choice = rng.choice(np.array(kinds), n_ops, p=probs)
+            for i, op in enumerate(choice.tolist()):
+                q = int(rng.integers(1, 500))
+                counts[op] = counts.get(op, 0) + 1
+                if op == "write":
+                    v = int(rng.integers(0, 10**6))
+                    t = srv.submit_write(q, v)
+                    kv[q] = v
+                elif op == "delete":
+                    t = srv.submit_delete(q)
+                    kv.pop(q, None)
+                elif op in ("range_count", "range_scan"):
+                    t = srv.submit_range(q, q + 30, op=op)
+                else:
+                    t = srv.submit(q, op=op)
+                    if op == "lookup":
+                        expected[t] = (q, dict(kv))
+                if (i + 1) % 80 == 0 or i == n_ops - 1:
+                    results = srv.drain()
+                    for t, (q, snap) in expected.items():
+                        val, found = results[t]
+                        assert bool(found[0]) == (q in snap), (mix, q)
+                        if q in snap:
+                            assert int(val[0]) == snap[q], (mix, q)
+                    expected = {}
+            s = srv.stats
+            assert s.requests == n_ops and s.submitted == n_ops
+            assert s.served == n_ops and srv.pending() == 0
+            # --- per-op lane accounting ties out against the op counts:
+            # singleton requests -> one lane per point/write/delete op, two
+            # per range request (the lo||hi concatenated descent)
+            for op, n in counts.items():
+                st = s.per_op[op]
+                assert st.served == n, (mix, op)
+                lanes = 2 * n if op.startswith("range") else n
+                assert st.lanes == lanes, (mix, op, st.lanes, lanes)
+                assert st.chunks > 0 and st.busy_s > 0, (mix, op)
+                # the throughput figures ARE served/lanes over busy time
+                assert abs(st.keys_per_sec * st.busy_s - st.served) < 1e-6
+                assert abs(st.lanes_per_sec * st.busy_s - st.lanes) < 1e-6
+            assert s.lanes == sum(
+                (2 * n if op.startswith("range") else n)
+                for op, n in counts.items()
+            )
+            assert sum(st.lanes for st in s.per_op.values()) == s.lanes
+            assert abs(s.keys_per_sec * s.busy_s - s.served) < 1e-6
+            assert abs(s.lanes_per_sec * s.busy_s - s.lanes) < 1e-6
+            # read busy attributions partition the read-span walls; write
+            # spans attribute their whole wall across their requests
+            read_busy = sum(
+                st.busy_s for op, st in s.per_op.items()
+                if op not in ("write", "delete")
+            )
+            write_busy = sum(
+                st.busy_s for op, st in s.per_op.items()
+                if op in ("write", "delete")
+            )
+            assert abs(read_busy + write_busy - s.busy_s) < 1e-6, mix
+            assert s.updates == counts["write"] + counts["delete"]
+            assert s.compactions > 0, mix  # the soak crosses the high-water
+            print("ok", mix, "ops", n_ops, "compactions", s.compactions)
+        print("ALL OK")
+    """, timeout=2400)

@@ -2,36 +2,16 @@
 
 The XLA device-count flag must be set before jax initializes, and the main
 test process must keep its single real device (smoke tests measure real
-behaviour), so every case here runs in a subprocess.
+behaviour), so every case here runs in a subprocess -- the shared runner
+lives in ``conftest.run_forced_multi_device`` (also the ``multi_device_host``
+fixture the sharded differential suite uses).
 """
 
-import os
-import subprocess
-import sys
-import textwrap
-
-import pytest
-
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from conftest import run_forced_multi_device
 
 
 def run_sub(body: str, devices: int = 8, timeout: int = 1200) -> str:
-    code = textwrap.dedent(
-        f"""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
-        import sys
-        sys.path.insert(0, {os.path.join(ROOT, 'src')!r})
-        import numpy as np
-        import jax, jax.numpy as jnp
-        from repro.sharding.compat import make_mesh
-        """
-    ) + textwrap.dedent(body)
-    out = subprocess.run(
-        [sys.executable, "-c", code], capture_output=True, text=True, timeout=timeout
-    )
-    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
-    return out.stdout
+    return run_forced_multi_device(body, devices=devices, timeout=timeout)
 
 
 def test_distributed_bst_lookup_vertical_partitioning():
