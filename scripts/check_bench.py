@@ -36,6 +36,11 @@ import json
 import os
 import sys
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+
+from repro.analysis import report  # noqa: E402  (shared exit-code helper)
+
 # The per-pair gate trips only when the kernel path is slower than the
 # driver by more than runner jitter: both timings are interpret-mode
 # medians on a shared CI box, and the queue-pair margins are 2.6-4.1x
@@ -68,9 +73,6 @@ def derived_dict(row) -> dict:
     )
 
 
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
 def main(path: str) -> None:
     sys.path.insert(0, os.path.join(REPO_ROOT, "benchmarks"))
     from run import SCHEMA, validate_rows  # the single schema definition
@@ -81,6 +83,10 @@ def main(path: str) -> None:
         raise SystemExit(f"{path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
     rows = doc.get("rows", [])
     validate_rows(rows)
+    # Every check below appends to ONE inventory and finishes through the
+    # shared report.gate helper (same contract as scripts/check_static.py):
+    # a run surfaces every failure, never just the first.
+    failures = []
 
     # --- coverage: the row families CI watches must actually exist
     ordered = [
@@ -89,13 +95,13 @@ def main(path: str) -> None:
                for op in ("predecessor", "range_count", "range_scan"))
     ]
     if not ordered:
-        raise SystemExit("no ordered-op benchmark rows emitted")
+        failures.append("no ordered-op benchmark rows emitted")
     mixed = {m for r in rows for m in ("90_10", "50_50") if m in r["name"]}
     if mixed != {"90_10", "50_50"}:
-        raise SystemExit(f"missing mixed read/write rows (got {sorted(mixed)})")
+        failures.append(f"missing mixed read/write rows (got {sorted(mixed)})")
     for r in rows:
         if "/mixed_" in r["name"] and "compactions" not in derived_dict(r):
-            raise SystemExit(f"mixed row without compactions: {r['name']}")
+            failures.append(f"mixed row without compactions: {r['name']}")
 
     # --- hyb kernel-vs-driver regression gate (same-run baseline)
     pairs: dict = {}
@@ -108,25 +114,24 @@ def main(path: str) -> None:
         p: v for p, v in pairs.items() if {"hyb_kernel", "hyb_driver"} <= set(v)
     }
     if not complete:
-        raise SystemExit("no hyb kernel-vs-driver pairs in the artifact")
-    failures = []
+        failures.append("no hyb kernel-vs-driver pairs in the artifact")
     for name, v in sorted(complete.items()):
         speedup = v["hyb_driver"] / v["hyb_kernel"]
         print(f"hyb gate {name}: kernel {v['hyb_kernel']:.0f}us vs "
               f"driver {v['hyb_driver']:.0f}us ({speedup:.2f}x)")
         if v["hyb_kernel"] > v["hyb_driver"] * JITTER_TOLERANCE:
-            failures.append(name)
+            failures.append(
+                f"hyb kernel path slower than the retired driver: {name}"
+            )
     for name, v in sorted(complete.items()):
         sibling = name + "q"  # HybN's queue twin, timed in the same run
         if sibling in complete:
             bound = complete[sibling]["hyb_kernel"] * SIBLING_TOLERANCE
             if v["hyb_kernel"] > bound:
-                failures.append(f"{name} (vs {sibling} sibling bound)")
-    if failures:
-        raise SystemExit(
-            f"hyb kernel path slower than the retired driver baseline "
-            f"(or its queue sibling's bound): {failures}"
-        )
+                failures.append(
+                    f"hyb kernel path past its queue sibling's bound: "
+                    f"{name} (vs {sibling})"
+                )
 
     # --- sharded serving family (DESIGN.md §9): coverage + same-run gate
     spairs: dict = {}
@@ -138,20 +143,20 @@ def main(path: str) -> None:
             )
     missing = {"hrz", "dup", "hyb"} - set(spairs)
     if missing:
-        raise SystemExit(f"missing sharded serving rows for {sorted(missing)}")
+        failures.append(f"missing sharded serving rows for {sorted(missing)}")
     if not any("sharded_mixed" in r["name"] for r in rows):
-        raise SystemExit("no sharded mixed read/write row emitted")
-    sharded_failures = []
+        failures.append("no sharded mixed read/write row emitted")
     for strategy, modes in sorted(spairs.items()):
         if {"sharded", "single"} - set(modes):
-            raise SystemExit(
+            failures.append(
                 f"sharded pair {strategy!r} incomplete (got {sorted(modes)})"
             )
+            continue
         s_us, s_d = modes["sharded"]
         c_us, c_d = modes["single"]
         for d in (s_d, c_d):
             if int(d.get("batch", 0)) < SHARD_MIN_BATCH:
-                raise SystemExit(
+                failures.append(
                     f"sharded pair {strategy!r} batch {d.get('batch')} below "
                     f"the {SHARD_MIN_BATCH}-row serving floor"
                 )
@@ -160,7 +165,9 @@ def main(path: str) -> None:
             print(f"shard gate dup: sharded {s_us:.0f}us vs single "
                   f"{c_us:.0f}us ({c_us / s_us:.2f}x)")
             if s_us > c_us * SHARD_JITTER_TOLERANCE:
-                sharded_failures.append("dup (throughput)")
+                failures.append(
+                    "sharded serving lost to single-chip: dup (throughput)"
+                )
         else:
             # The capacity play: strictly fewer stored nodes per device.
             s_mem = int(s_d["mem_nodes_dev"])
@@ -168,14 +175,15 @@ def main(path: str) -> None:
             print(f"shard gate {strategy}: {s_mem} nodes/device sharded vs "
                   f"{c_mem} single ({c_mem / max(s_mem, 1):.2f}x)")
             if s_mem >= c_mem:
-                sharded_failures.append(f"{strategy} (mem_nodes_dev)")
-    if sharded_failures:
-        raise SystemExit(
-            f"sharded serving lost to single-chip on its scaling axis: "
-            f"{sharded_failures}"
-        )
-    print(f"{path}: schema + coverage + hyb gate + sharded gate OK "
-          f"({len(rows)} rows, {len(complete)} pairs, {len(spairs)} spairs)")
+                failures.append(
+                    f"sharded serving lost to single-chip: {strategy} "
+                    "(mem_nodes_dev)"
+                )
+    report.gate(
+        failures,
+        f"{path}: schema + coverage + hyb gate + sharded gate OK "
+        f"({len(rows)} rows, {len(complete)} pairs, {len(spairs)} spairs)",
+    )
 
 
 if __name__ == "__main__":

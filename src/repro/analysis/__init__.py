@@ -1,0 +1,27 @@
+"""repro.analysis: static contract checker + hot-path lint (DESIGN.md §10).
+
+The correctness-tooling layer for everything under ``core/``, ``kernels/``
+and ``serving/`` -- three cooperating passes behind one CLI
+(``python -m repro.analysis`` / ``scripts/check_static.py``):
+
+  * ``lint``       -- AST rules for the JAX footguns that cost this repo
+                      throughput: tracer bool/if, host syncs on device
+                      values, host ops inside Pallas kernel bodies,
+                      retrace hazards (jit-in-loop, unhashable statics),
+                      and an explicit-sync allowlist budget;
+  * ``contracts``  -- shape/dtype/layout contracts on ``SearchPlan``, the
+                      forest kernel operands, the delta quadruple and the
+                      sharded program builders, verified abstractly via
+                      ``jax.eval_shape`` on representative specs;
+  * ``runtime``/``gate`` -- compile-cache instrumentation + transfer-guard
+                      wiring asserting the steady-state ``BSTServer``
+                      drain compiles nothing and moves nothing it did not
+                      plan to move.
+
+``invariants`` is the pure leaf both the checkers and the production code
+import, so the scattered runtime asserts and the static checks share one
+definition (DESIGN.md §10).  This ``__init__`` stays import-light on
+purpose: ``core``/``serving`` import ``repro.analysis.invariants`` and
+``repro.analysis.runtime``, and importing anything heavier here would
+close the cycle.
+"""

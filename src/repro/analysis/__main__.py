@@ -1,0 +1,125 @@
+"""CLI: ``python -m repro.analysis [paths...] [flags]`` (DESIGN.md §10).
+
+Default run = the static passes (lint + contracts + dead-code drift);
+``--serve-gate`` adds the runtime retrace/transfer gate (a real sharded
+``BSTServer`` drain per strategy, so it costs seconds, not millis).
+``--report-dead`` prints the full reachability classification instead of
+just gating it.  ``--report FILE`` writes the static-report/v1 JSON
+artifact CI uploads alongside the BENCH json.
+
+Exit code: 0 iff every selected pass is clean; otherwise the full
+violation inventory prints and the process exits 1 (never first-failure —
+one CI run shows everything).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+from repro.analysis import deadcode, lint, report
+
+DEFAULT_PATHS = (
+    "src/repro/core",
+    "src/repro/kernels",
+    "src/repro/serving",
+    "src/repro/launch",
+)
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static contract checker + hot-path lint for the "
+        "Pallas forest stack",
+    )
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        help=f"files/dirs to lint (default: {' '.join(DEFAULT_PATHS)})",
+    )
+    ap.add_argument(
+        "--repo-root",
+        default=os.getcwd(),
+        help="repo root for the dead-code graph (default: cwd)",
+    )
+    ap.add_argument(
+        "--allowlist",
+        default=lint.DEFAULT_ALLOWLIST,
+        help="lint allowlist file (default: analysis/allowlist.txt)",
+    )
+    ap.add_argument(
+        "--skip-contracts",
+        action="store_true",
+        help="lint/dead-code only (no jax import, sub-second)",
+    )
+    ap.add_argument(
+        "--report-dead",
+        action="store_true",
+        help="print the full module reachability classification",
+    )
+    ap.add_argument(
+        "--serve-gate",
+        action="store_true",
+        help="also run the runtime retrace/transfer gate (real sharded "
+        "BSTServer drains on hrz/dup/hyb)",
+    )
+    ap.add_argument(
+        "--report",
+        metavar="FILE",
+        help="write the static-report/v1 JSON artifact",
+    )
+    args = ap.parse_args(argv)
+
+    hard: List[report.Violation] = []
+    passes: List[str] = []
+
+    lint_paths = args.paths or [
+        os.path.join(args.repo_root, p) for p in DEFAULT_PATHS
+    ]
+    lint_hard, lint_soft = lint.lint_paths(lint_paths, args.allowlist)
+    hard.extend(lint_hard)
+    passes.append(f"lint ({len(lint_soft)} allowlisted)")
+
+    dead_hard, classes = deadcode.report_dead(args.repo_root)
+    hard.extend(dead_hard)
+    passes.append(f"deadcode ({len(classes)} quarantined/unreachable)")
+    if args.report_dead:
+        quarantine = deadcode.load_quarantine()
+        for mod, kind in sorted(classes.items()):
+            note = quarantine.get(mod, "<NO QUARANTINE ENTRY>")
+            print(f"dead-code {kind}: {mod} -- {note}")
+        if not classes:
+            print("dead-code: every module reachable from an executable root")
+
+    if not args.skip_contracts:
+        from repro.analysis import contracts
+
+        hard.extend(contracts.run_contracts())
+        passes.append("contracts")
+
+    if args.serve_gate:
+        from repro.analysis import gate
+
+        hard.extend(gate.run_serve_gates())
+        passes.append("serve-gate (hrz/dup/hyb)")
+
+    if args.report:
+        report.write_json(
+            args.report,
+            report.to_doc(hard, lint_soft, extra={"passes": passes}),
+        )
+        print(f"wrote {args.report}")
+
+    try:
+        report.gate_violations(hard, "static checks OK: " + ", ".join(passes))
+    except SystemExit as e:
+        print(e, file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

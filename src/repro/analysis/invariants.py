@@ -1,0 +1,120 @@
+"""Shared cross-module invariants: ONE definition, two consumers.
+
+Every check here is imported both by the production code that must fail
+loudly at runtime (``EngineConfig.__post_init__``, ``BSTServer``
+construction, the sharded program builders) and by the static contract
+checker (``repro.analysis.contracts``) that verifies the same properties
+on representative specs in CI.  That is the whole point of the module: a
+bound that lives only in a runtime assert drifts; a bound that lives only
+in a checker rots.  Keep this file PURE -- stdlib only, no jax, no
+repro imports -- so ``core``/``serving``/``kernels`` can depend on it
+without cycles.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+# The §6 ordered-query payload: the field order of ``tree.OrderedResult``
+# and the lane width of ``plans.pack_ordered``'s packed collective image
+# are the same contract seen from two sides (DESIGN.md §9).  The contract
+# checker asserts the NamedTuple and the packing honor this tuple.
+ORDERED_FIELDS: Tuple[str, ...] = (
+    "value",
+    "found",
+    "pred_key",
+    "pred_value",
+    "succ_key",
+    "succ_value",
+    "rank",
+)
+ORDERED_PACK_WIDTH: int = len(ORDERED_FIELDS)
+
+# The delta buffer rides every query as this many flat (C,) int32 operands
+# -- sorted keys, values, tombstone flags, signed rank weights (DESIGN.md
+# §7) -- replicated on every device in sharded mode (§9).
+DELTA_OPERANDS: int = 4
+
+
+def check_power_of_two(n: int, what: str) -> int:
+    """Validate ``n`` is a positive power of two; returns ``log2(n)``."""
+    if n < 1 or (n & (n - 1)):
+        raise ValueError(f"{what} must be a positive power of two (got {n})")
+    return n.bit_length() - 1
+
+
+def split_level_for(n_trees: int) -> int:
+    """The hybrid split level: ``log2(n_trees)`` vertical subtrees hang off
+    the register layer, so the subtree count must be a power of two."""
+    return check_power_of_two(n_trees, "n_trees")
+
+
+def check_forest_nodes(n_nodes: int, height: int) -> None:
+    """A flat level-major operand stores the FULL perfect tree."""
+    if n_nodes != (1 << (height + 1)) - 1:
+        raise ValueError(
+            f"flat operand has {n_nodes} nodes, want 2^{height + 1}-1"
+        )
+
+
+def check_chunk_divides(chunk_size: int, n_shards: int, axis: str) -> None:
+    """Sharded programs are fixed-shape SPMD: an unpadded chunk whose batch
+    does not divide over the axis has no legal placement, so the contract
+    fails loudly at construction instead of deep inside shard_map
+    (DESIGN.md §9)."""
+    if chunk_size % n_shards:
+        raise ValueError(
+            f"chunk_size={chunk_size} must be divisible by the mesh "
+            f"axis {axis!r} size {n_shards} -- sharded chunks split "
+            "evenly across devices"
+        )
+
+
+def check_delta_config(
+    delta_capacity: int, delta_high_water: Optional[int]
+) -> None:
+    """The write-path capacity bounds (DESIGN.md §7)."""
+    if delta_capacity < 0:
+        raise ValueError(
+            f"delta_capacity must be >= 0 (got {delta_capacity}); "
+            "0 disables the write path"
+        )
+    if (
+        delta_capacity > 0
+        and delta_high_water is not None
+        and not 1 <= delta_high_water <= delta_capacity
+    ):
+        raise ValueError(
+            f"delta_high_water={delta_high_water} must lie in "
+            f"[1, delta_capacity={delta_capacity}] -- a mark above "
+            "the capacity could never trigger compaction and the buffer "
+            "would overflow"
+        )
+
+
+def resolved_high_water(delta_capacity: int, delta_high_water: Optional[int]) -> int:
+    """The compaction trigger: explicit mark, else 3/4 of the capacity."""
+    if delta_high_water is not None:
+        return delta_high_water
+    return max(1, (3 * delta_capacity) // 4)
+
+
+def capacity_for_trace(batch: int, n_shards: int, capacity_frac: float) -> int:
+    """Per-(src,dst) dispatch-buffer depth sized PER TRACE: the local
+    batch's fair share ``batch / n_shards`` scaled by the fraction, clamped
+    to ``[1, batch]`` (a depth above the batch is stall-free anyway, and a
+    zero depth could never place a key).  The concatenated ``lo || hi``
+    range traces see 2x the lanes and get 2x the depth, keeping the slack a
+    real constant across ops (DESIGN.md §9)."""
+    if capacity_frac <= 0:
+        raise ValueError(f"capacity_frac must be > 0 (got {capacity_frac})")
+    return max(1, min(batch, int(math.ceil(batch / n_shards * capacity_frac))))
+
+
+def buffer_capacity(chunk: int, n_trees: int, buffer_slack: float) -> int:
+    """Single-chip twin of ``capacity_for_trace``: per-subtree dispatch
+    depth for a ``chunk``-lane frontend (``plans.hyb_capacity``)."""
+    if buffer_slack <= 0:
+        raise ValueError(f"buffer_slack must be > 0 (got {buffer_slack})")
+    return max(1, int(math.ceil(chunk / n_trees * buffer_slack)))

@@ -1,0 +1,565 @@
+"""AST lint: the JAX footguns that cost this repo throughput (DESIGN.md §10).
+
+Static rules, tuned to this codebase's hot path (``core/``, ``kernels/``,
+``serving/``, ``launch/``).  Analysis is per-function and deliberately
+shallow -- single-module, no dataflow across calls -- because every rule
+here is a *pattern* gate: it must be cheap, deterministic and explainable
+in one line.  The runtime gate (``repro.analysis.gate``) covers what
+static patterns cannot (an actual steady-state drain must compile nothing
+and move nothing unplanned).
+
+Rules:
+  ANA001 tracer-control-flow  -- ``if``/``while``/``assert``/``bool()`` on
+         an expression holding a traced value: a silent host sync outside
+         jit, a ``TracerBoolConversionError`` (or a retrace-per-value
+         trap) inside.
+  ANA002 host-op-in-jit       -- ``np.asarray``/``np.array``/``.item()``/
+         ``.tolist()``/``jax.device_get``/``print`` inside a function that
+         is jitted or shard_map'd: each is a hidden transfer or a
+         trace-time constant fold that breaks the compiled program.
+  ANA003 kernel-host-op       -- host/numpy ops, ``jnp.asarray`` or
+         dynamic-shape jnp calls inside a Pallas kernel body (operands
+         arrive as refs; loads/stores are ``pl.*``/ref ops), and rebinding
+         a ``*_ref`` parameter instead of storing through it.
+  ANA004 retrace-hazard       -- ``jax.jit`` called inside a loop body (a
+         fresh cache entry per iteration), mutable default arguments on a
+         jitted function, and ``static_argnames`` naming a parameter with
+         an unhashable (dict/list/set) default: all silent retraces.
+  ANA005 implicit-host-pull   -- ``int()``/``float()``/``np.asarray()``/
+         ``.item()``/... on a value produced by a jitted function or a
+         ``jnp``/``lax`` call: an implicit device->host sync on the hot
+         path.  The sanctioned spelling is ``analysis.runtime.device_fetch``
+         (or ``jax.device_get``), which rule ANA006 budgets.
+  ANA006 explicit-sync-budget -- every EXPLICIT fetch
+         (``jax.device_get``/``device_fetch``) in ``core/``/``kernels/``/
+         ``serving/`` must be allowlisted: planned sync points are part of
+         the design (the ONE-sync-per-compaction budget, the per-chunk
+         retire fetch) and anything else is a new hot-path stall.
+
+The allowlist file (``analysis/allowlist.txt``) carries
+``<path-glob> <rule|*> <reason>`` lines; seed modules off the serving path
+are allowlisted wholesale, sanctioned syncs per rule (DESIGN.md §10).
+"""
+
+from __future__ import annotations
+
+import ast
+import fnmatch
+import os
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.report import Violation
+
+# Module attributes whose call results live on device: taint sources for
+# ANA001/ANA005.  ``jnp``/``jax.lax``/``jax.random`` calls are matched
+# structurally; these NAMES cover the repo's own device-returning APIs
+# (the jitted kernels wrappers and the engine/serving internals), because
+# single-module analysis cannot see across imports.  Extend this set when
+# a new device-returning entry point joins the hot path (DESIGN.md §10).
+DEVICE_APIS: Set[str] = {
+    "bst_search_forest",
+    "bst_ordered_forest",
+    "bst_hybrid_forest",
+    "bst_search",
+    "bst_delta_resolve",
+    "queue_dispatch",
+    "flash_attention",
+    "query",
+    "_query_chunk",
+    "_squery",
+    "_ingest",
+    "device_put",
+}
+
+# jnp calls whose output shape depends on input VALUES: inside a kernel or
+# a jitted body these either fail to lower or force a retrace per content.
+DYNAMIC_SHAPE_CALLS = {"nonzero", "flatnonzero", "unique", "argwhere", "where1"}
+
+HOST_PULL_METHODS = {"item", "tolist"}
+HOST_PULL_FUNCS = {"int", "float", "bool"}
+EXPLICIT_SYNC_DIRS = ("/core/", "/kernels/", "/serving/")
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jax.lax.cond' for Attribute chains, 'jit' for Names, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jnp_call(call: ast.Call) -> bool:
+    d = _dotted(call.func)
+    if not d:
+        return False
+    return (
+        d.startswith("jnp.")
+        or d.startswith("jax.lax.")
+        or d.startswith("lax.")
+        or d.startswith("jax.random.")
+        or d.startswith("jax.nn.")
+    )
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """jax.jit / jit / functools.partial(jax.jit, ...) as an expression."""
+    d = _dotted(node)
+    if d in ("jax.jit", "jit"):
+        return True
+    if isinstance(node, ast.Call):
+        d = _dotted(node.func)
+        if d in ("jax.jit", "jit"):
+            return True
+        if d in ("functools.partial", "partial") and node.args:
+            return _is_jit_expr(node.args[0])
+    return False
+
+
+class _FnInfo:
+    def __init__(self, node: ast.AST, parent: Optional["_FnInfo"]):
+        self.node = node
+        self.parent = parent
+        self.jit = False
+        self.kernel = False
+
+
+class Linter:
+    def __init__(self, path: str, tree: ast.Module):
+        self.path = path
+        self.tree = tree
+        self.violations: List[Violation] = []
+        # names of module functions wrapped by jax.jit anywhere (decorator,
+        # ``f = jax.jit(g)``, ``jax.jit(self.meth)``, shard_map(fn, ...))
+        self.jitted_names: Set[str] = set()
+        self.kernel_names: Set[str] = set()
+        self._collect_wrappers()
+
+    # ------------------------------------------------------------ discovery
+    def _collect_wrappers(self) -> None:
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = _dotted(node.func)
+            args = node.args
+            if d in ("jax.jit", "jit", "shard_map", "jax.experimental.shard_map.shard_map"):
+                if args:
+                    self._mark(args[0], self.jitted_names)
+            elif d in ("functools.partial", "partial") and args:
+                if _is_jit_expr(node.args[0]) and len(args) > 1:
+                    self._mark(args[1], self.jitted_names)
+                # functools.partial(_some_kernel, ...) fed to pallas_call
+                inner = _dotted(args[0])
+                if inner and inner.rsplit(".", 1)[-1].endswith("_kernel"):
+                    self.kernel_names.add(inner.rsplit(".", 1)[-1])
+            elif d in ("pl.pallas_call", "pallas_call") and args:
+                self._mark(args[0], self.kernel_names)
+
+    @staticmethod
+    def _mark(expr: ast.AST, into: Set[str]) -> None:
+        d = _dotted(expr)
+        if d:
+            into.add(d.rsplit(".", 1)[-1])
+        elif isinstance(expr, ast.Call):
+            # partial(fn, ...) / jax.jit(fn) nested one level
+            dd = _dotted(expr.func)
+            if dd in ("functools.partial", "partial") and expr.args:
+                Linter._mark(expr.args[0], into)
+
+    def _fn_context(self, fn: ast.AST, parent: Optional[_FnInfo]) -> _FnInfo:
+        info = _FnInfo(fn, parent)
+        name = getattr(fn, "name", "<lambda>")
+        args = getattr(fn.args, "args", [])
+        if name.endswith("_kernel") or any(
+            a.arg.endswith("_ref") or a.arg.endswith("_scr") for a in args
+        ):
+            info.kernel = True
+        if name in self.kernel_names:
+            info.kernel = True
+        if name in self.jitted_names:
+            info.jit = True
+        for dec in getattr(fn, "decorator_list", []):
+            if _is_jit_expr(dec):
+                info.jit = True
+        if parent is not None:
+            info.jit = info.jit or parent.jit
+            info.kernel = info.kernel or parent.kernel
+        return info
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> List[Violation]:
+        self._walk_body(self.tree.body, parent=None)
+        return self.violations
+
+    def _walk_body(self, body: Sequence[ast.stmt], parent: Optional[_FnInfo]):
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                info = self._fn_context(stmt, parent)
+                self._check_function(stmt, info)
+                self._walk_body(stmt.body, info)
+            elif isinstance(stmt, ast.ClassDef):
+                self._walk_body(stmt.body, parent)
+            else:
+                # module-level statements: still subject to the loop rule
+                self._check_stmt_shallow(stmt, parent)
+                for sub in ast.iter_child_nodes(stmt):
+                    if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                        info = self._fn_context(sub, parent)
+                        self._check_function(sub, info)
+                        self._walk_body(sub.body, info)
+
+    def _check_stmt_shallow(self, stmt: ast.stmt, parent: Optional[_FnInfo]):
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.For, ast.While)):
+                self._check_jit_in_loop(node)
+
+    def _add(self, rule: str, node: ast.AST, msg: str) -> None:
+        self.violations.append(
+            Violation(rule, self.path, getattr(node, "lineno", 0), msg)
+        )
+
+    # ------------------------------------------------------ per-function pass
+    def _check_function(self, fn: ast.AST, info: _FnInfo) -> None:
+        tainted: Set[str] = set()
+        self._check_defaults(fn, info)
+        for node in self._own_nodes(fn):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                self._track_taint(node, tainted)
+            if isinstance(node, (ast.If, ast.While)):
+                self._check_tracer_test(node.test, tainted, "if/while")
+            if isinstance(node, ast.Assert):
+                self._check_tracer_test(node.test, tainted, "assert")
+            if isinstance(node, (ast.For, ast.While)):
+                self._check_jit_in_loop(node)
+            if isinstance(node, ast.Call):
+                self._check_call(node, info, tainted)
+
+    def _own_nodes(self, fn: ast.AST):
+        """Walk the function body but stop at nested function boundaries
+        (nested defs get their own pass with inherited context)."""
+        stack = list(fn.body)
+        while stack:
+            node = stack.pop(0)
+            yield node
+            for child in ast.iter_child_nodes(node):
+                if not isinstance(
+                    child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+                ):
+                    stack.append(child)
+
+    # ------------------------------------------------------------ taint model
+    def _is_device_expr(self, expr: ast.AST, tainted: Set[str]) -> bool:
+        if isinstance(expr, ast.Name):
+            return expr.id in tainted
+        if isinstance(expr, ast.Call):
+            if _is_jnp_call(expr):
+                return True
+            d = _dotted(expr.func)
+            if d:
+                leaf = d.rsplit(".", 1)[-1]
+                if leaf in DEVICE_APIS or leaf in self.jitted_names:
+                    return True
+            return False
+        if isinstance(expr, ast.Attribute):
+            # Array metadata is host-side: int(x.shape[0]) is not a pull.
+            if expr.attr in ("shape", "dtype", "ndim", "size", "sharding"):
+                return False
+            return self._is_device_expr(expr.value, tainted)
+        if isinstance(expr, (ast.Subscript, ast.Starred)):
+            return self._is_device_expr(expr.value, tainted)
+        if isinstance(expr, ast.BinOp):
+            return self._is_device_expr(expr.left, tainted) or self._is_device_expr(
+                expr.right, tainted
+            )
+        if isinstance(expr, (ast.Tuple, ast.List)):
+            return any(self._is_device_expr(e, tainted) for e in expr.elts)
+        return False
+
+    def _track_taint(self, node: ast.stmt, tainted: Set[str]) -> None:
+        if isinstance(node, ast.AugAssign):
+            return
+        value = node.value
+        if value is None:
+            return
+        is_dev = self._is_device_expr(value, tainted)
+        targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+        for tgt in targets:
+            names = []
+            if isinstance(tgt, ast.Name):
+                names = [tgt.id]
+            elif isinstance(tgt, (ast.Tuple, ast.List)):
+                names = [e.id for e in tgt.elts if isinstance(e, ast.Name)]
+            for n in names:
+                if is_dev:
+                    tainted.add(n)
+                else:
+                    tainted.discard(n)  # rebound to a host value
+
+    def _contains_device_value(self, expr: ast.AST, tainted: Set[str]) -> bool:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Name) and node.id in tainted:
+                return True
+            if isinstance(node, ast.Call) and _is_jnp_call(node):
+                return True
+        return False
+
+    # -------------------------------------------------------------- the rules
+    def _check_tracer_test(self, test: ast.AST, tainted: Set[str], where: str):
+        if self._contains_device_value(test, tainted):
+            self._add(
+                "ANA001",
+                test,
+                f"{where} condition on a traced/device value -- a hidden "
+                "host sync (or TracerBoolConversionError under jit); hoist "
+                "to jnp.where / lax.cond, or fetch explicitly first",
+            )
+
+    def _check_jit_in_loop(self, loop: ast.stmt) -> None:
+        for node in ast.walk(loop):
+            if node is loop:
+                continue
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(node, ast.Call) and _is_jit_expr(node):
+                self._add(
+                    "ANA004",
+                    node,
+                    "jax.jit called inside a loop body: every iteration "
+                    "builds a fresh cache entry (silent retrace) -- hoist "
+                    "the jit out of the loop",
+                )
+
+    def _check_defaults(self, fn: ast.AST, info: _FnInfo) -> None:
+        args = getattr(fn, "args", None)
+        if args is None:
+            return
+        defaults = list(args.defaults) + [
+            d for d in args.kw_defaults if d is not None
+        ]
+        if info.jit:
+            for d in defaults:
+                if isinstance(d, (ast.Dict, ast.List, ast.Set)):
+                    self._add(
+                        "ANA004",
+                        d,
+                        f"mutable default argument on jitted function "
+                        f"{getattr(fn, 'name', '<lambda>')!r}: unhashable "
+                        "as a static and a retrace per fresh object",
+                    )
+
+    def _check_call(self, call: ast.Call, info: _FnInfo, tainted: Set[str]):
+        d = _dotted(call.func) or ""
+        leaf = d.rsplit(".", 1)[-1]
+
+        # --- static_argnames over unhashable defaults (any context)
+        if d in ("jax.jit", "jit"):
+            self._check_static_argnames(call)
+
+        # --- kernel-body rules
+        if info.kernel:
+            if d.startswith("np.") or d.startswith("numpy."):
+                self._add(
+                    "ANA003",
+                    call,
+                    f"{d}() inside a Pallas kernel body: operands are refs "
+                    "in device memory; use jnp/pl ops on loaded blocks",
+                )
+            elif d in ("jnp.asarray", "jnp.array"):
+                self._add(
+                    "ANA003",
+                    call,
+                    f"{d}() inside a Pallas kernel body: kernel operands "
+                    "are already arrays -- asarray implies host data",
+                )
+            elif d.startswith("jnp.") and leaf in DYNAMIC_SHAPE_CALLS:
+                self._add(
+                    "ANA003",
+                    call,
+                    f"{d}() has a value-dependent output shape -- it cannot "
+                    "lower inside a kernel; use a masked fixed-shape form",
+                )
+            elif d in ("jax.device_put", "jax.device_get", "print"):
+                self._add(
+                    "ANA003",
+                    call,
+                    f"{d}() inside a Pallas kernel body is a host op; "
+                    "use pl.debug_print / ref stores",
+                )
+
+        # --- in-jit host ops
+        if info.jit and not info.kernel:
+            if d in ("np.asarray", "np.array", "numpy.asarray", "numpy.array"):
+                self._add(
+                    "ANA002",
+                    call,
+                    f"{d}() under jit folds the operand to a trace-time "
+                    "constant (or forces a transfer): use jnp, or move the "
+                    "conversion outside the jitted function",
+                )
+            elif d in ("jax.device_get",):
+                self._add(
+                    "ANA002",
+                    call,
+                    "jax.device_get under jit is a transfer inside the "
+                    "compiled program; return the value instead",
+                )
+            elif d == "print":
+                self._add(
+                    "ANA002",
+                    call,
+                    "print() under jit runs at trace time only; use "
+                    "jax.debug.print for runtime values",
+                )
+            elif (
+                isinstance(call.func, ast.Attribute)
+                and call.func.attr in HOST_PULL_METHODS
+            ):
+                self._add(
+                    "ANA002",
+                    call,
+                    f".{call.func.attr}() under jit syncs the device value "
+                    "at trace time (ConcretizationTypeError on tracers)",
+                )
+
+        # --- implicit host pulls on device values (any context)
+        pulled: Optional[ast.AST] = None
+        if leaf in ("asarray", "array") and (
+            d.startswith("np.") or d.startswith("numpy.")
+        ):
+            pulled = call.args[0] if call.args else None
+        elif d in HOST_PULL_FUNCS and len(call.args) == 1:
+            pulled = call.args[0]
+        elif (
+            isinstance(call.func, ast.Attribute)
+            and call.func.attr in HOST_PULL_METHODS
+        ):
+            pulled = call.func.value
+        if pulled is not None and self._is_device_expr(pulled, tainted):
+            self._add(
+                "ANA005",
+                call,
+                "implicit device->host pull of a traced/jitted result on "
+                "the hot path; the sanctioned spelling is "
+                "analysis.runtime.device_fetch (ANA006 budgets it)",
+            )
+        # --- explicit sync budget (hot-path dirs only)
+        norm = "/" + self.path.replace(os.sep, "/")
+        if (d == "jax.device_get" or leaf == "device_fetch") and any(
+            seg in norm for seg in EXPLICIT_SYNC_DIRS
+        ):
+            self._add(
+                "ANA006",
+                call,
+                f"explicit device->host fetch ({d}) on the hot path: "
+                "planned sync points must be allowlisted with their budget "
+                "(analysis/allowlist.txt, DESIGN.md §10)",
+            )
+
+    def _check_static_argnames(self, call: ast.Call) -> None:
+        static: List[str] = []
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                for node in ast.walk(kw.value):
+                    if isinstance(node, ast.Constant) and isinstance(
+                        node.value, str
+                    ):
+                        static.append(node.value)
+        if not static or not call.args:
+            return
+        target = call.args[0]
+        fn = None
+        if isinstance(target, ast.Name):
+            for node in ast.walk(self.tree):
+                if (
+                    isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and node.name == target.id
+                ):
+                    fn = node
+                    break
+        if fn is None:
+            return
+        args = fn.args
+        named = args.args + args.kwonlyargs
+        defaults = [None] * (len(args.args) - len(args.defaults)) + list(
+            args.defaults
+        ) + list(args.kw_defaults)
+        for a, dflt in zip(named, defaults):
+            if a.arg in static and isinstance(dflt, (ast.Dict, ast.List, ast.Set)):
+                self._add(
+                    "ANA004",
+                    dflt,
+                    f"static_argnames names {a.arg!r} whose default is "
+                    "unhashable (dict/list/set): jit cache keys on statics "
+                    "by hash -- this retraces or throws per call",
+                )
+
+
+# ---------------------------------------------------------------- allowlist
+def load_allowlist(path: str) -> List[Tuple[str, str, str]]:
+    """Parse ``<path-glob> <rule|*> <reason...>`` lines (# comments)."""
+    entries: List[Tuple[str, str, str]] = []
+    with open(path) as f:
+        for raw in f:
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            parts = line.split(None, 2)
+            if len(parts) < 2:
+                raise ValueError(f"malformed allowlist line: {raw!r}")
+            glob, rule = parts[0], parts[1]
+            reason = parts[2] if len(parts) > 2 else ""
+            entries.append((glob, rule, reason))
+    return entries
+
+
+def is_allowlisted(
+    v: Violation, entries: Sequence[Tuple[str, str, str]]
+) -> bool:
+    path = v.path.replace(os.sep, "/")
+    for glob, rule, _reason in entries:
+        if rule not in ("*", v.rule):
+            continue
+        if fnmatch.fnmatch(path, glob) or fnmatch.fnmatch(path, "*/" + glob):
+            return True
+    return False
+
+
+DEFAULT_ALLOWLIST = os.path.join(os.path.dirname(__file__), "allowlist.txt")
+
+
+def lint_paths(
+    paths: Sequence[str], allowlist: Optional[str] = DEFAULT_ALLOWLIST
+) -> Tuple[List[Violation], List[Violation]]:
+    """Lint every .py under ``paths``; returns (violations, allowlisted)."""
+    files: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+        else:
+            for root, _dirs, names in os.walk(p):
+                files.extend(
+                    os.path.join(root, n) for n in sorted(names)
+                    if n.endswith(".py")
+                )
+    entries = load_allowlist(allowlist) if allowlist else []
+    hard: List[Violation] = []
+    soft: List[Violation] = []
+    for path in sorted(set(files)):
+        with open(path) as f:
+            src = f.read()
+        try:
+            tree = ast.parse(src, filename=path)
+        except SyntaxError as e:
+            hard.append(Violation("ANA000", path, e.lineno or 0, f"syntax error: {e.msg}"))
+            continue
+        seen: Set[Tuple[str, str, int, str]] = set()
+        for v in Linter(os.path.relpath(path), tree).run():
+            key = (v.rule, v.path, v.line, v.msg)
+            if key in seen:
+                continue  # nested-loop walks can visit a call twice
+            seen.add(key)
+            (soft if is_allowlisted(v, entries) else hard).append(v)
+    return hard, soft

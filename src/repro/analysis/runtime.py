@@ -1,0 +1,165 @@
+"""Runtime-assisted retrace/transfer detection (DESIGN.md §10).
+
+Two instruments, both cheap enough to wrap real serving code:
+
+  * ``compile_watch()`` -- compile-cache instrumentation: flips
+    ``jax_log_compiles`` and captures the "Compiling <name> ..." records
+    jax's dispatch/pxla loggers emit once per (program, shape) compile.
+    A jit cache hit emits nothing, so a steady-state region that compiles
+    ANYTHING is a retrace by definition -- content-dependent shapes,
+    unhashable statics and fresh-function-per-call bugs all surface here.
+  * ``transfer_watch()`` -- ``jax.transfer_guard`` wiring plus the
+    planned-fetch budget.  Implicit host->device transfers raise under
+    the guard on every backend.  Implicit device->host conversions are
+    NOT interceptable from Python on the CPU backend (jaxlib's ArrayImpl
+    serves numpy through the C buffer protocol, and host-resident buffers
+    make the d2h guard a no-op), so the d2h side is enforced by
+    construction instead: every PLANNED fetch on the hot path goes
+    through ``device_fetch`` (the one sanctioned spelling, budgeted by
+    lint rule ANA006), the watcher counts those, and the serve gate
+    asserts the count matches the drain's exact retire budget.  Anything
+    pulled outside ``device_fetch`` is a lint violation (ANA005); on a
+    real TPU backend the same ``transfer_guard`` wiring additionally
+    raises on it at runtime.
+
+``device_fetch`` lives here -- importable by ``core``/``serving`` without
+cycles (this module depends only on jax + stdlib).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import logging
+import threading
+from typing import Iterator, List
+
+import jax
+
+# Loggers that emit one WARNING record per actual compilation.  The pxla
+# one carries "Compiling <fn> with global shapes and types [...]" for
+# every lowered program (jit and shard_map alike) on jax 0.4.x.
+_COMPILE_LOGGERS = (
+    "jax._src.interpreters.pxla",
+    "jax._src.dispatch",
+)
+_COMPILE_PREFIXES = ("Compiling ",)
+
+_fetch_count_lock = threading.Lock()
+_fetch_count = 0
+
+
+def device_fetch(value):
+    """The sanctioned device->host fetch (DESIGN.md §10).
+
+    Semantically ``jax.device_get`` -- numpy arrays and pytrees pass
+    through -- but counted, so the runtime gate can assert that a
+    steady-state drain performs EXACTLY its planned number of fetches and
+    nothing more.  Hot-path code must use this (or ``jax.device_get``)
+    instead of ``np.asarray``/``int()`` on device values; lint rule
+    ANA006 requires each call site to carry an allowlist entry naming its
+    budget.
+    """
+    global _fetch_count
+    with _fetch_count_lock:
+        _fetch_count += 1
+    return jax.device_get(value)
+
+
+def fetch_count() -> int:
+    """Total ``device_fetch`` calls this process (monotonic counter)."""
+    return _fetch_count
+
+
+@dataclasses.dataclass
+class CompileRecord:
+    logger: str
+    message: str
+
+
+class CompileWatch:
+    """Captured compile events; ``count`` == number of programs compiled."""
+
+    def __init__(self) -> None:
+        self.records: List[CompileRecord] = []
+
+    @property
+    def count(self) -> int:
+        return len(self.records)
+
+    def messages(self) -> List[str]:
+        return [r.message for r in self.records]
+
+
+class _CaptureHandler(logging.Handler):
+    def __init__(self, watch: CompileWatch, logger_name: str) -> None:
+        super().__init__(level=logging.DEBUG)
+        self._watch = watch
+        self._logger_name = logger_name
+
+    def emit(self, record: logging.LogRecord) -> None:
+        msg = record.getMessage()
+        if msg.startswith(_COMPILE_PREFIXES):
+            self._watch.records.append(
+                CompileRecord(self._logger_name, msg.split("\n", 1)[0])
+            )
+
+
+@contextlib.contextmanager
+def compile_watch() -> Iterator[CompileWatch]:
+    """Capture every compilation inside the block.
+
+    Zero records over a region means every program the region ran was
+    already in the jit cache -- the steady-state contract.  The handler
+    swallows the records (propagation off) so gated serving loops do not
+    spray WARNINGs to stderr.
+    """
+    watch = CompileWatch()
+    prev_flag = jax.config.jax_log_compiles
+    jax.config.update("jax_log_compiles", True)
+    attached = []
+    for name in _COMPILE_LOGGERS:
+        logger = logging.getLogger(name)
+        handler = _CaptureHandler(watch, name)
+        logger.addHandler(handler)
+        attached.append((logger, handler, logger.propagate, logger.level))
+        logger.propagate = False
+        if logger.level > logging.WARNING or logger.level == logging.NOTSET:
+            logger.setLevel(logging.WARNING)
+    try:
+        yield watch
+    finally:
+        for logger, handler, propagate, level in attached:
+            logger.removeHandler(handler)
+            logger.propagate = propagate
+            logger.setLevel(level)
+        jax.config.update("jax_log_compiles", prev_flag)
+
+
+@dataclasses.dataclass
+class TransferWatch:
+    """Fetches observed (via ``device_fetch``) inside a ``transfer_watch``."""
+
+    fetches_before: int = 0
+
+    @property
+    def fetches(self) -> int:
+        return fetch_count() - self.fetches_before
+
+
+@contextlib.contextmanager
+def transfer_watch() -> Iterator[TransferWatch]:
+    """Forbid implicit transfers; count sanctioned fetches.
+
+    Implicit host->device raises immediately (every backend).  Implicit
+    device->host raises on backends with device-resident buffers (TPU/GPU)
+    -- on CPU it is physically free and invisible, which is exactly why
+    planned fetches must route through ``device_fetch`` (counted here) and
+    implicit pulls are a STATIC lint violation (ANA005).  Explicit
+    ``jax.device_put`` / ``jax.device_get`` stay legal under "disallow":
+    the contract bans *unplanned* movement, not movement.
+    """
+    watch = TransferWatch(fetches_before=fetch_count())
+    with jax.transfer_guard_host_to_device("disallow"), \
+            jax.transfer_guard_device_to_host("disallow"):
+        yield watch

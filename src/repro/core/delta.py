@@ -51,6 +51,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import runtime as analysis_runtime
 from repro.core import tree as tree_lib
 from repro.core.tree import OrderedResult, TreeData
 from repro.kernels import ops as kops
@@ -443,7 +444,9 @@ def compact(tree: TreeData, delta: DeltaBuffer) -> TreeData:
     sk, sv, count = compact_sorted(
         tree.keys, tree.values, rank_to_bfs, tree.n_real, delta, out_size
     )
-    n_real = int(count)  # the write path's one host sync, per compaction
+    # The write path's ONE sanctioned host sync, per compaction: counted by
+    # the runtime gate, allowlisted under lint rule ANA006 (DESIGN.md §10).
+    n_real = int(analysis_runtime.device_fetch(count))
     if n_real == 0:
         raise ValueError("compaction would empty the tree")
     return tree_lib.layout_from_sorted_device(sk, sv, n_real)

@@ -59,7 +59,6 @@ contract, so ``BSTServer`` shards by flipping a constructor argument.
 
 from __future__ import annotations
 
-import math
 from typing import Optional, Tuple
 
 import jax
@@ -69,10 +68,21 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.sharding.compat import shard_map
 
+from repro.analysis import invariants
 from repro.core import delta as delta_lib
 from repro.core import plans as plans_lib
 from repro.core import tree as tree_lib
 from repro.core.tree import TreeData
+
+# The delta buffer rides every sharded program as four REPLICATED flat
+# operands (DESIGN.md §9).  One constant serves both shard_map builders and
+# the static contract checker, so the replication layout cannot drift.
+DELTA_IN_SPECS = (P(),) * invariants.DELTA_OPERANDS
+
+# Deriving the kernel operands from a DeltaBuffer compares against the host
+# sentinel scalar; jitted so steady-state chunks replay a cached program
+# instead of re-shipping the constant to device on every call.
+_delta_operands = jax.jit(delta_lib.operands)
 
 
 def stored_nodes_per_device(*arrays) -> int:
@@ -94,9 +104,7 @@ def shard_subtrees(
 ) -> Tuple[jax.Array, jax.Array, int, int]:
     """Vertical-partition the tree across ``axis``: (M, sub_n) arrays."""
     M = mesh.shape[axis]
-    split_level = int(math.log2(M))
-    if (1 << split_level) != M:
-        raise ValueError(f"mesh axis {axis} size {M} must be a power of two")
+    split_level = invariants.check_power_of_two(M, f"mesh axis {axis} size")
     if split_level > tree.height:
         raise ValueError("tree shallower than the mesh axis")
     idx = tree_lib.all_subtree_gather_indices(tree.height, split_level)
@@ -135,9 +143,59 @@ def _make_query_runner(
             sorted_cache.append((tree.keys[rank_to_bfs], tree.values[rank_to_bfs]))
         return sorted_cache[0]
 
+    # Per-op epilogues, jitted once per (op, k, delta?) so steady-state
+    # chunks replay cached programs: run eagerly, every sentinel/arange/
+    # n_real constant they mix with device results would ride host->device
+    # again on EVERY chunk (the retrace/transfer gate fails exactly there).
+    # The snapshot constants (sorted view, rank map) fold at compile time.
+    epilogues: dict = {}
+
+    def _epilogue(op: str, k: int, with_delta: bool):
+        key = (op, k if op == "range_scan" else None, with_delta)
+        if key not in epilogues:
+            if with_delta:
+                # Materialized OUTSIDE the trace: caching a gather computed
+                # under jit would leak tracers into sorted_cache.
+                sorted_keys, sorted_values = _sorted_view()
+            if op in plans_lib.RANGE_OPS:
+                def _split(res):
+                    # lo||hi concatenated descent (DESIGN.md §6) splits
+                    # back here, inside the jitted epilogue: an eager
+                    # slice of the sharded result is a per-chunk transfer.
+                    B = res.value.shape[0] // 2
+                    return (
+                        plans_lib.OrderedResult(*(f[:B] for f in res)),
+                        plans_lib.OrderedResult(*(f[B:] for f in res)),
+                    )
+
+                if with_delta:
+                    def fn(res, delta):
+                        r_lo, r_hi = _split(res)
+                        return delta_lib.range_epilogue(
+                            op, sorted_keys, sorted_values, tree.n_real,
+                            delta, r_lo, r_hi, k=k,
+                        )
+                else:
+                    def fn(res):
+                        r_lo, r_hi = _split(res)
+                        return plans_lib.range_epilogue(
+                            op, tree, rank_to_bfs, r_lo, r_hi, k=k
+                        )
+            elif with_delta:
+                def fn(q, res, delta):
+                    return delta_lib.point_epilogue(
+                        op, q, res, sorted_keys, sorted_values, tree.n_real,
+                        delta,
+                    )
+            else:
+                def fn(q, res):
+                    return plans_lib.point_epilogue(op, q, res)
+            epilogues[key] = jax.jit(fn)
+        return epilogues[key]
+
     def run(op: str, queries, queries_hi=None, *, k: int = 8, delta=None):
         plans_lib.validate_op(op, queries_hi is not None)
-        d_ops = None if delta is None else delta_lib.operands(delta)
+        d_ops = None if delta is None else _delta_operands(delta)
         if op == "lookup" and lookup is not None:
             # delta-hit > tombstone > tree-hit resolves in-program, so the
             # membership columns come back final either way.
@@ -145,26 +203,14 @@ def _make_query_runner(
         if op in plans_lib.RANGE_OPS:
             lo = jnp.asarray(queries, jnp.int32)
             hi = jnp.asarray(queries_hi, jnp.int32)
-            B = lo.shape[0]
             both = jnp.concatenate([lo, hi])
             res = descend(both, d_ops)
-            r_lo = plans_lib.OrderedResult(*(f[:B] for f in res))
-            r_hi = plans_lib.OrderedResult(*(f[B:] for f in res))
-            if delta is not None:
-                sorted_keys, sorted_values = _sorted_view()
-                return delta_lib.range_epilogue(
-                    op, sorted_keys, sorted_values, tree.n_real, delta,
-                    r_lo, r_hi, k=k,
-                )
-            return plans_lib.range_epilogue(op, tree, rank_to_bfs, r_lo, r_hi, k=k)
+            epi = _epilogue(op, k, delta is not None)
+            return epi(res, delta) if delta is not None else epi(res)
         q = jnp.asarray(queries, jnp.int32)
         res = descend(q, d_ops)
-        if delta is not None:
-            sorted_keys, sorted_values = _sorted_view()
-            return delta_lib.point_epilogue(
-                op, q, res, sorted_keys, sorted_values, tree.n_real, delta
-            )
-        return plans_lib.point_epilogue(op, q, res)
+        epi = _epilogue(op, k, delta is not None)
+        return epi(q, res, delta) if delta is not None else epi(q, res)
 
     return run
 
@@ -242,7 +288,7 @@ def make_distributed_query(
         if capacity_frac is not None:
             # Sized per trace: the lo||hi range traces see 2x the lanes
             # and get 2x the depth, keeping the slack a real constant.
-            cap = max(1, min(B, int(math.ceil(B / M * capacity_frac))))
+            cap = invariants.capacity_for_trace(B, M, capacity_frac)
         else:
             cap = capacity if capacity is not None else B
         dest, reg = plans_lib.route_phase_ordered(
@@ -291,13 +337,12 @@ def make_distributed_query(
 
     def _program(with_delta: bool):
         if with_delta not in programs:
-            n_extra = 4 if with_delta else 0
             programs[with_delta] = jax.jit(
                 shard_map(
                     _query_local,
                     mesh=mesh,
                     in_specs=(P(axis), P(axis, None), P(axis, None))
-                    + (P(),) * n_extra,
+                    + (DELTA_IN_SPECS if with_delta else ()),
                     out_specs=tuple([P(axis)] * 7),
                     check=False,
                 )
@@ -410,12 +455,12 @@ def make_dup_query(
     def _program(body, n_out: int, with_delta: bool):
         key = (body.__name__, with_delta)
         if key not in programs:
-            n_extra = 4 if with_delta else 0
             programs[key] = jax.jit(
                 shard_map(
                     body,
                     mesh=mesh,
-                    in_specs=(P(axis), P(), P()) + (P(),) * n_extra,
+                    in_specs=(P(axis), P(), P())
+                    + (DELTA_IN_SPECS if with_delta else ()),
                     out_specs=tuple([P(axis)] * n_out),
                     check=False,
                 )

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import invariants
 from repro.core import delta as delta_lib
 from repro.core import plans as plans_lib
 from repro.core import tree as tree_lib
@@ -66,30 +67,17 @@ class EngineConfig:
     delta_high_water: Optional[int] = None  # default: 3/4 of the capacity
 
     def __post_init__(self) -> None:
-        if self.delta_capacity < 0:
-            raise ValueError(
-                f"delta_capacity must be >= 0 (got {self.delta_capacity}); "
-                "0 disables the write path"
-            )
-        if (
-            self.delta_capacity > 0
-            and self.delta_high_water is not None
-            and not 1 <= self.delta_high_water <= self.delta_capacity
-        ):
-            raise ValueError(
-                f"delta_high_water={self.delta_high_water} must lie in "
-                f"[1, delta_capacity={self.delta_capacity}] -- a mark above "
-                "the capacity could never trigger compaction and the buffer "
-                "would overflow"
-            )
+        # Shared with repro.analysis.contracts: the checker verifies the
+        # same bounds statically, so neither side can drift (DESIGN.md §10).
+        invariants.check_delta_config(self.delta_capacity, self.delta_high_water)
 
     def resolved_register_levels(self) -> int:
         return plans_lib.resolved_register_levels(self.n_trees, self.register_levels)
 
     def resolved_high_water(self) -> int:
-        if self.delta_high_water is not None:
-            return self.delta_high_water
-        return max(1, (3 * self.delta_capacity) // 4)
+        return invariants.resolved_high_water(
+            self.delta_capacity, self.delta_high_water
+        )
 
     @property
     def name(self) -> str:

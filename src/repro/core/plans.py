@@ -39,6 +39,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import invariants
 from repro.core import buffers as buf
 from repro.core import delta as delta_lib
 from repro.core import tree as tree_lib
@@ -187,9 +188,7 @@ def make_plan(
         )
     if r > tree.height:
         raise ValueError("register layer deeper than the tree")
-    split_level = int(math.log2(n_trees))
-    if (1 << split_level) != n_trees:
-        raise ValueError("n_trees must be a power of two")
+    split_level = invariants.split_level_for(n_trees)
     # One flat operand carries the whole pipeline (DESIGN.md §8): levels
     # [0, split_level) double as the register layer and each vertical
     # subtree is a BRAM slice of the same level-major image, so the hybrid
@@ -394,13 +393,17 @@ def pack_ordered(res: OrderedResult) -> jax.Array:
 
     The whole ordered payload then rides a routing collective as ONE
     ``all_to_all`` (or one device transfer) instead of a collective per
-    field -- the packed-combine contract of DESIGN.md §9.
+    field -- the packed-combine contract of DESIGN.md §9.  The lane width
+    is pinned to ``invariants.ORDERED_PACK_WIDTH`` so a field added to
+    ``OrderedResult`` cannot silently widen every collective.
     """
+    assert len(res) == invariants.ORDERED_PACK_WIDTH, res._fields
     return jnp.stack([f.astype(jnp.int32) for f in res], axis=-1)
 
 
 def unpack_ordered(packed: jax.Array) -> OrderedResult:
     # NamedTuple order on both sides keeps pack/unpack structurally tied.
+    assert packed.shape[-1] == invariants.ORDERED_PACK_WIDTH, packed.shape
     fields = tuple(packed[..., i] for i in range(packed.shape[-1]))
     res = OrderedResult(*fields)
     return res._replace(found=res.found != 0)
@@ -447,7 +450,7 @@ KERNEL_BLOCK_Q = 512
 def hyb_capacity(plan: SearchPlan, chunk: int) -> int:
     """Per-subtree dispatch-buffer depth for a ``chunk``-lane frontend:
     the fair share ``chunk / n_trees`` scaled by the plan's slack."""
-    return max(1, int(math.ceil(chunk / plan.n_trees * plan.buffer_slack)))
+    return invariants.buffer_capacity(chunk, plan.n_trees, plan.buffer_slack)
 
 
 def _hybrid_descend(

@@ -43,6 +43,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.analysis import invariants
+
 # Plain ints: jnp scalars would be captured as consts inside the kernel.
 SENTINEL_VALUE = -1
 NO_PRED_KEY = -(2**31)  # int32 min: identity of the max-tracked predecessor
@@ -295,8 +297,8 @@ def bst_ordered_forest_pallas(
         raise ValueError("forest operands and queries must be 2-D")
     T, B = queries.shape
     n = forest_keys.shape[1]
-    if n != (1 << (height + 1)) - 1:
-        raise ValueError(f"flat operand has {n} nodes, want 2^{height + 1}-1")
+    # Shared with repro.analysis.contracts (DESIGN.md §10).
+    invariants.check_forest_nodes(n, height)
     if not shared_tree and forest_keys.shape[0] != T:
         raise ValueError("need one tree row per query row (or shared_tree=True)")
     if dispatch is None:

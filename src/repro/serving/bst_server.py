@@ -66,6 +66,8 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.analysis import invariants
+from repro.analysis import runtime as analysis_runtime
 from repro.core import distributed as dist_lib
 from repro.core import plans as plans_lib
 from repro.core import tree as tree_lib
@@ -177,17 +179,9 @@ class BSTServer:
                     f"the mesh has {mesh.axis_names} (see "
                     "distributed.make_serving_mesh)"
                 )
-            n_shards = mesh.shape[axis]
-            if chunk_size % n_shards:
-                # Sharded programs are fixed-shape SPMD: an unpadded chunk
-                # whose batch does not divide over the axis has no legal
-                # placement, so the contract fails loudly at construction
-                # instead of deep inside shard_map (DESIGN.md §9).
-                raise ValueError(
-                    f"chunk_size={chunk_size} must be divisible by the mesh "
-                    f"axis {axis!r} size {n_shards} -- sharded chunks split "
-                    "evenly across devices"
-                )
+            # Shared with repro.analysis.contracts: the checker verifies the
+            # same bound statically, so neither side can drift (DESIGN.md §10).
+            invariants.check_chunk_divides(chunk_size, mesh.shape[axis], axis)
         self.stats = ServerStats()
         self._pending: List[_Request] = []
         self._pending_keys = 0
@@ -548,21 +542,25 @@ class BSTServer:
             ops.lanes += lanes
             columns = self._fill_columns(columns, a.size, sl, res)
             if op == "lookup":
-                # hits accumulated per chunk, padded lanes excluded
-                self.stats.found += int(np.asarray(res[1])[:real].sum())
+                # hits accumulated per chunk from the host columns the
+                # retire already paid for -- no extra device sync
+                self.stats.found += int(columns[1][lo : lo + real].sum())
         self.stats.served += B
         self.stats.op(op).served += B
         return [col[:B] for col in columns]
 
     def _fill_columns(self, columns, total: int, sl: slice, res: tuple):
-        """Copy one chunk's result tuple into the stream-sized host columns."""
+        """Copy one chunk's result tuple into the stream-sized host columns.
+
+        The ONLY place read results cross device->host: one sanctioned
+        ``device_fetch`` per chunk (the retire budget the runtime gate
+        asserts -- DESIGN.md §10); found counts and per-request slices all
+        read the fetched host columns afterwards.
+        """
         if columns is None:
-            columns = [
-                np.empty((total,) + np.asarray(c).shape[1:], np.asarray(c).dtype)
-                for c in res
-            ]
-        for col, c in zip(columns, res):
-            col[sl] = np.asarray(c)
+            columns = [np.empty((total,) + c.shape[1:], c.dtype) for c in res]
+        for col, c in zip(columns, analysis_runtime.device_fetch(res)):
+            col[sl] = c
         return columns
 
     def _serve_stream_sharded(
@@ -591,7 +589,7 @@ class BSTServer:
             columns = self._fill_columns(columns, a.size, r_sl, r_res)
             if op == "lookup":
                 real = min(self.chunk_size, B - r_lo)
-                found += int(np.asarray(r_res[1])[:real].sum())
+                found += int(columns[1][r_lo : r_lo + real].sum())
 
         t0 = time.perf_counter()
         for lo in range(0, a.size, self.chunk_size):
